@@ -1,0 +1,62 @@
+"""Bank-count scaling study (beyond the paper's 4/8/16): how far does "more
+banks mean more absolute performance" (paper §VI) hold for the radix-16 FFT,
+and when does the crossbar area stop paying for itself?
+
+The conflict simulator works for any power-of-two bank count; area beyond
+16 banks is extrapolated from Table I's observed linear arbiter/mux scaling
+(16-bank = 1 sector, each doubling ≈ doubles arbitration logic — the paper's
+own "logic area varies linearly with the number of banks").
+
+CSV: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost import SECTOR_ALMS
+from repro.core.memsim import banked
+from repro.isa.programs.fft import fft_program
+from repro.isa.vm import run_program
+
+BANKS = (4, 8, 16, 32, 64)
+
+
+def _area_sectors(n_banks: int) -> float:
+    """Table I observed: 16 banks = 1 sector, halving per halving; linear
+    extrapolation above 16 (arbiters + muxes dominate and scale ~linearly)."""
+    return n_banks / 16.0
+
+
+def rows():
+    out = []
+    prog = fft_program(4096, 16)
+    mem0 = np.zeros(16384, np.float32)
+    base_time = None
+    for nb in BANKS:
+        for mapping in ("offset", "xor"):
+            spec = banked(nb, mapping)
+            c = run_program(prog, spec, mem0, execute=False).cost
+            t = c.time_us(spec.fmax_mhz)
+            if base_time is None:
+                base_time = t
+            area = _area_sectors(nb)
+            out.append({
+                "name": f"bankscale_fft_r16_{nb}B_{mapping}",
+                "us_per_call": round(t, 2),
+                "total_cycles": c.total_cycles,
+                "area_sectors": area,
+                "perf_per_area": round(1.0 / (t * area), 4),
+                "d_bank_eff_pct": round(c.read_bank_eff(), 1),
+            })
+    return out
+
+
+def main():
+    for r in rows():
+        extra = "|".join(f"{k}={v}" for k, v in r.items()
+                         if k not in ("name", "us_per_call"))
+        print(f"{r['name']},{r['us_per_call']},{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Fig 9 reproduction: cost (true footprint) vs performance (radix-16
+4096-pt FFT) across memory sizes — the banked-vs-multiport crossover.
+CSV: name,us_per_call,derived."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import cost as C
+from repro.core.memsim import banked, multiport
+from repro.isa.programs.fft import fft_program
+from repro.isa.vm import run_program
+
+SIZES_KB = (64, 112, 168, 224)
+MEMS = [multiport(4, 1), multiport(4, 2), banked(16, "offset"), banked(16),
+        banked(8, "offset"), banked(4, "offset")]
+
+
+def rows():
+    prog = fft_program(4096, 16)
+    mem0 = np.zeros(16384, np.float32)
+    perf = {}
+    for spec in MEMS:
+        c = run_program(prog, spec, mem0, execute=False).cost
+        perf[spec.name] = c.time_us(spec.fmax_mhz)
+    slowest = max(perf.values())
+    out = []
+    for size in SIZES_KB:
+        for spec in MEMS:
+            try:
+                area = C.processor_footprint_alms(spec, float(size))
+            except ValueError:
+                out.append({"name": f"fig9_{size}KB_{spec.name}",
+                            "us_per_call": perf[spec.name],
+                            "footprint_alms": "over-capacity",
+                            "norm_perf": round(perf[spec.name] / slowest, 3)})
+                continue
+            out.append({"name": f"fig9_{size}KB_{spec.name}",
+                        "us_per_call": perf[spec.name],
+                        "footprint_alms": round(area),
+                        "norm_perf": round(perf[spec.name] / slowest, 3),
+                        "perf_per_area": round(1e6 / (perf[spec.name] * area),
+                                               2)})
+    return out
+
+
+def main():
+    for r in rows():
+        extra = "|".join(f"{k}={v}" for k, v in r.items()
+                         if k not in ("name", "us_per_call"))
+        print(f"{r['name']},{r['us_per_call']},{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""§Roofline harness: reads dry-run artifacts, prints the three-term table.
+CSV: name,us_per_call(dominant term in us),derived."""
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import cell_roofline, load_artifacts
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def rows(mesh: str = "single"):
+    out = []
+    if not os.path.isdir(ART):
+        return out
+    for art in load_artifacts(ART, mesh):
+        r = cell_roofline(art)
+        if r is None:
+            out.append({"name": f"roofline_{art['arch']}_{art['shape']}",
+                        "us_per_call": -1, "error": True})
+            continue
+        row = {
+            "name": f"roofline_{r.arch}_{r.shape}",
+            "us_per_call": round(r.dominant_s * 1e6, 1),
+            "compute_s": round(r.compute_s, 5),
+            "memory_s": round(r.memory_s, 5),
+            "memory_lb_s": round(r.memory_lb_s, 5),
+            "collective_s": round(r.collective_s, 5),
+            "dominant": r.dominant,
+            "useful_ratio": round(r.useful_ratio, 3),
+            "roofline_fraction": round(r.roofline_fraction, 3),
+            "roofline_fraction_opt": round(r.roofline_fraction_opt, 3),
+            "fits_16g": r.fits_hbm,
+        }
+        from repro.configs import SHAPES
+        shape = SHAPES[r.shape]
+        tps = r.decode_tokens_per_s(shape)
+        if tps is not None:
+            row["decode_tokens_per_s"] = round(tps, 1)
+            row["decode_latency_ms"] = round(r.decode_latency_ms(shape), 2)
+        out.append(row)
+    return out
+
+
+def main():
+    for r in rows():
+        extra = "|".join(f"{k}={v}" for k, v in r.items()
+                         if k not in ("name", "us_per_call"))
+        print(f"{r['name']},{r['us_per_call']},{extra}")
+
+
+if __name__ == "__main__":
+    main()

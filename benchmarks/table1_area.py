@@ -1,0 +1,39 @@
+"""Table I / §IV area model: per-module resources and sector footprints.
+CSV: name,us_per_call(n/a -> 0),derived."""
+from __future__ import annotations
+
+from repro.core import cost as C
+from repro.core.memsim import banked, multiport
+
+MEMS = [banked(16), banked(8), banked(4), multiport(4, 1), multiport(4, 2)]
+
+
+def rows():
+    out = []
+    core = C.core_resources()
+    out.append({"name": "simt_core_16sp", "us_per_call": 0,
+                "alms": core.alms, "m20k": core.m20k, "dsp": core.dsp})
+    for spec in MEMS:
+        r = C.memory_resources(spec)
+        cap = C.max_capacity_kb(spec)
+        out.append({
+            "name": f"mem_{spec.name}",
+            "us_per_call": 0,
+            "alms": r.alms, "m20k": r.m20k,
+            "max_capacity_kb": cap,
+            "footprint_64kb": round(C.footprint_alms(spec, 64.0)),
+            "footprint_max": round(C.footprint_alms(spec, cap)),
+            "replication": C.replication_factor(spec),
+        })
+    return out
+
+
+def main():
+    for r in rows():
+        extra = "|".join(f"{k}={v}" for k, v in r.items()
+                         if k not in ("name", "us_per_call"))
+        print(f"{r['name']},{r['us_per_call']},{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Table II reproduction: matrix transpose over 8 memory architectures.
+CSV: name,us_per_call,derived  (derived = sim cycles | paper cycles | Δ%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.paper_data import TABLE2
+from repro.core.memsim import TRANSPOSE_MEMORIES
+from repro.isa.programs.transpose import transpose_program
+from repro.isa.vm import run_program
+
+
+def rows():
+    out = []
+    for n in (32, 64, 128):
+        prog = transpose_program(n)
+        mem0 = np.zeros(2 * n * n, np.float32)
+        for spec in TRANSPOSE_MEMORIES:
+            c = run_program(prog, spec, mem0, execute=False).cost
+            t = c.time_us(spec.fmax_mhz)
+            ref = TABLE2[n].get(spec.name)
+            delta = 100 * (c.total_cycles - ref[2]) / ref[2] if ref else None
+            out.append({
+                "name": f"transpose{n}_{spec.name}",
+                "us_per_call": round(t, 3),
+                "load": c.load_cycles, "store": c.store_cycles,
+                "total": c.total_cycles,
+                "paper_total": ref[2] if ref else "",
+                "delta_pct": round(delta, 2) if delta is not None else "",
+                "r_bank_eff": round(c.read_bank_eff(), 1)
+                if spec.is_banked else "",
+                "w_bank_eff": round(c.write_bank_eff(), 1)
+                if spec.is_banked else "",
+            })
+    return out
+
+
+def main():
+    for r in rows():
+        print(f"{r['name']},{r['us_per_call']},"
+              f"total={r['total']}|paper={r['paper_total']}|"
+              f"d={r['delta_pct']}%|Reff={r['r_bank_eff']}|"
+              f"Weff={r['w_bank_eff']}")
+
+
+if __name__ == "__main__":
+    main()

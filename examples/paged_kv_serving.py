@@ -1,0 +1,49 @@
+"""Banked paged-KV cache walkthrough: the paper's memory controller as a
+serving-time page allocator.
+
+Simulates a decode fleet appending tokens for a batch of sequences; shows
+the page table, the arbiter-balanced bank occupancy, and verifies the
+gathered K/V against what was written.
+
+Run:  PYTHONPATH=src python examples/paged_kv_serving.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.kvcache import (PagedKVConfig, append_token,
+                                   bank_load_stats, gather_kv, init_state)
+
+cfg = PagedKVConfig(n_pages=64, page_len=8, n_banks=8, mapping="xor",
+                    kv_heads=2, head_dim=4)
+B, STEPS = 6, 40
+state = init_state(cfg, batch=B, max_seq=64, dtype=jnp.float32)
+
+rng = np.random.default_rng(0)
+written = []
+for t in range(STEPS):
+    k = jnp.asarray(rng.standard_normal((B, cfg.kv_heads, cfg.head_dim)),
+                    jnp.float32)
+    written.append(np.asarray(k))
+    state = append_token(cfg, state, k, k * 0.5)
+
+print(f"{B} sequences × {STEPS} tokens, page_len={cfg.page_len}, "
+      f"{cfg.n_banks} banks ({cfg.mapping} map)")
+print("\npage table (physical page per logical page; -1 = unmapped):")
+for b in range(B):
+    print(f"  seq{b}: {np.asarray(state.page_table[b]).tolist()}")
+
+stats = bank_load_stats(state)
+used = np.asarray(state.bank_used)
+print(f"\nbank occupancy: {used.tolist()}  "
+      f"(max/mean serialization = {float(stats['serialization']):.2f} — "
+      f"1.0 is a perfectly banked allocation)")
+
+k, v, valid = gather_kv(cfg, state, max_seq=48)
+got = np.asarray(k)[:, :STEPS]
+want = np.stack(written, axis=1)
+err = np.abs(got - want).max()
+print(f"\ngather_kv roundtrip max-abs error: {err:.1e}  "
+      f"(valid mask: {int(np.asarray(valid).sum())} == {B * STEPS} tokens)")
+assert err == 0.0
+print("banked paged-KV cache verified ✓")

@@ -1,0 +1,52 @@
+"""Batched serving example: prefill + decode a batch of requests through the
+ServeEngine (banked paged-KV decode path — the same serve_step the dry-run
+lowers at decode_32k/long_500k scale).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch llama3.2-1b]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.configs.base import RunConfig
+from repro.launch.sharding import NO_AXES
+from repro.models import init_tree, model_specs
+from repro.serving.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if cfg.frontend:
+        raise SystemExit("serving example targets text-only archs")
+    rc = RunConfig(remat="none", attn_impl="dense")
+    params = init_tree(model_specs(cfg), jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, rc, params, NO_AXES, max_batch=args.batch,
+                         max_seq=args.prompt_len + args.new_tokens + 4)
+
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
+    res = engine.generate(prompts, max_new_tokens=args.new_tokens,
+                          temperature=args.temperature)
+    print(f"arch={cfg.name}  batch={args.batch}  "
+          f"prompt={args.prompt_len}  generated={res.steps} tokens/request")
+    for b in range(args.batch):
+        print(f"  req{b}: prompt={prompts[b].tolist()[:8]}... "
+              f"-> {res.tokens[b].tolist()}")
+    # decode determinism check (greedy)
+    res2 = engine.generate(prompts, max_new_tokens=args.new_tokens)
+    assert args.temperature > 0 or (res.tokens == res2.tokens).all()
+    print("greedy decode deterministic ✓")
+
+
+if __name__ == "__main__":
+    main()

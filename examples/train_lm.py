@@ -1,0 +1,83 @@
+"""End-to-end training driver: train an LM on the synthetic Markov-chain
+corpus with the full production trainer (AdamW + WSD, remat, checkpointing,
+preemption guard, watchdog).
+
+CPU presets:
+  tiny  (default) — ~3M-param llama-family model, 200 steps, loss visibly
+                    drops from ~ln(V) toward the chain entropy (minutes).
+  100m            — ~100M-param model, few hundred steps; sized for a real
+                    accelerator (works on CPU but slow).
+
+Any assigned architecture is selectable: --arch jamba-v0.1-52b --smoke uses
+its reduced-family config so every family (hybrid/MoE/SSM/...) is runnable.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--preset tiny]
+          [--arch llama3.2-1b --smoke] [--steps 200] [--ckpt /tmp/ck]
+"""
+import argparse
+import dataclasses
+import logging
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data.pipeline import SyntheticLM
+from repro.train import Trainer, TrainerConfig
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+PRESETS = {
+    "tiny": ModelConfig(name="tiny-llama", family="dense", n_layers=4,
+                        d_model=128, n_heads=4, n_kv_heads=2, d_ff=512,
+                        vocab_size=512, tie_embeddings=True),
+    "100m": ModelConfig(name="lm-100m", family="dense", n_layers=12,
+                        d_model=768, n_heads=12, n_kv_heads=4, d_ff=3072,
+                        vocab_size=32768, tie_embeddings=True),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=list(PRESETS), default="tiny")
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the arch's reduced smoke config")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    if args.arch:
+        assert args.smoke, "full assigned configs need a TPU pod; use --smoke"
+        cfg = get_smoke_config(args.arch)
+    else:
+        cfg = PRESETS[args.preset]
+
+    rc = RunConfig(remat="none", attn_impl="dense", learning_rate=args.lr,
+                   warmup_steps=20)
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                     global_batch=args.batch, seed=7, branching=4,
+                     frontend_tokens=cfg.n_frontend_tokens
+                     if cfg.frontend else 0,
+                     d_model=cfg.d_model)
+    tc = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
+                       ckpt_every=max(args.steps // 4, 1), log_every=10)
+    out = Trainer(cfg, rc, tc, ds).run()
+
+    hist = out["history"]
+    print("\nstep  loss")
+    for h in hist:
+        print(f"{h['step']:5d}  {h['loss']:.4f}")
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    chain_entropy = np.log(ds.branching)
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"(uniform ln V = {np.log(cfg.vocab_size):.2f}, "
+          f"chain entropy floor ≈ {chain_entropy:.2f})")
+    assert last < first, "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpoint import (Checkpointer, latest_step,
+                                         restore_checkpoint, save_checkpoint)
+
+__all__ = ["Checkpointer", "latest_step", "restore_checkpoint",
+           "save_checkpoint"]

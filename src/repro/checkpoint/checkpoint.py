@@ -1,0 +1,138 @@
+"""Sharded, async, fault-tolerant checkpointing (no external deps).
+
+Layout:   <dir>/step_<N>/          (tmp-dir + atomic rename = crash safe)
+            manifest.json          tree structure, shapes, dtypes, step
+            arrays.npz             flattened leaves (host-local values)
+
+Restore is *elastic*: arrays are placed with ``jax.device_put`` against the
+restoring mesh's NamedShardings, so a checkpoint written on one topology
+restores onto another (fewer/more devices) — the re-mesh path of
+runtime/elastic.py.  Async mode snapshots to host then writes on a worker
+thread so the train loop never blocks on IO; ``wait()`` drains before exit.
+
+In a true multi-host deployment each host writes its addressable shards and
+the manifest is written by host 0 (single-host in this container; the
+code paths are the same via ``jax.device_get`` of addressable data).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save_checkpoint(directory: str, step: int, state, keep: int = 3) -> str:
+    """Synchronous sharded save with atomic rename.  Returns final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=directory)
+    try:
+        leaves = _flatten_with_paths(state)
+        arrays = {f"leaf_{i}": np.asarray(jax.device_get(v))
+                  for i, (_, v) in enumerate(leaves)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": int(step),
+            "paths": [p for p, _ in leaves],
+            "shapes": [list(np.shape(jax.device_get(v))) for _, v in leaves],
+            "dtypes": [str(np.asarray(jax.device_get(v)).dtype)
+                       for _, v in leaves],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(directory, keep)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like,
+                       shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedShardings for elastic placement on the current mesh."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    assert len(leaves_like) == len(manifest["paths"]), \
+        f"checkpoint has {len(manifest['paths'])} leaves, " \
+        f"target {len(leaves_like)}"
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_like))
+    out = []
+    for i, (ref, shd) in enumerate(zip(leaves_like, shard_leaves)):
+        arr = data[f"leaf_{i}"]
+        want = tuple(np.shape(ref))
+        assert tuple(arr.shape) == want, \
+            f"leaf {manifest['paths'][i]}: ckpt {arr.shape} != target {want}"
+        arr = arr.astype(ref.dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(int(m.group(1)) for d in os.listdir(directory)
+                   if (m := re.fullmatch(r"step_(\d+)", d)))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class Checkpointer:
+    """Async checkpointer: snapshot on the caller thread (cheap device_get),
+    serialize on a worker thread; at most one pending write (back-pressure
+    drops to synchronous if the previous write is still in flight)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, state) -> None:
+        self.wait()
+        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, snapshot, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,21 @@
+"""MiniCPM 2B — llama-like dense, WSD schedule [arXiv:2404.06395].
+Note: 36 heads do not divide the 16-way model axis -> attention falls back to
+replicated-head placement (see launch/sharding.py); vocab 122753 is padded to
+a TP multiple (Megatron-style)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b", family="dense",
+    n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36, d_ff=5760,
+    vocab_size=122753,
+    tie_embeddings=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-smoke", family="dense",
+        n_layers=2, d_model=72, n_heads=6, n_kv_heads=6, d_ff=144,
+        vocab_size=509,  # deliberately odd: exercises vocab padding
+        tie_embeddings=True,
+    )

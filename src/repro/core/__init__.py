@@ -1,0 +1,33 @@
+"""The paper's primary contribution: banked shared memories for SIMT
+processors, as (a) a faithful functional+timing simulator and (b) an
+ahead-of-time arbitration/dispatch library reused by the TPU framework
+(MoE dispatch, banked embedding gather, paged KV).
+"""
+from repro.core.bankmap import BANK_MAPS, bank_of, get_bank_map
+from repro.core.conflicts import (bank_counts, bank_efficiency, bank_onehot,
+                                  imbalance_factor, max_conflicts,
+                                  op_cycles_from_addrs)
+from repro.core.arbiter import (arbitrate_schedule, arbiter_step,
+                                grant_positions, output_mux_controls,
+                                pack_requests, unpack_grants)
+from repro.core.dispatch import (DispatchPlan, banked_dispatch,
+                                 gather_from_banks, scatter_to_banks,
+                                 serialization_factor)
+from repro.core.memsim import (LANES, PAPER_MEMORIES, TRANSPOSE_MEMORIES,
+                               MemSpec, Memory, TraceCost, banked, cost_trace,
+                               instruction_cycles, multiport,
+                               op_conflict_cycles)
+from repro.core import cost
+
+__all__ = [
+    "BANK_MAPS", "bank_of", "get_bank_map",
+    "bank_counts", "bank_efficiency", "bank_onehot", "imbalance_factor",
+    "max_conflicts", "op_cycles_from_addrs",
+    "arbitrate_schedule", "arbiter_step", "grant_positions",
+    "output_mux_controls", "pack_requests", "unpack_grants",
+    "DispatchPlan", "banked_dispatch", "gather_from_banks",
+    "scatter_to_banks", "serialization_factor",
+    "LANES", "PAPER_MEMORIES", "TRANSPOSE_MEMORIES", "MemSpec", "Memory",
+    "TraceCost", "banked", "cost_trace", "instruction_cycles", "multiport",
+    "op_conflict_cycles", "cost",
+]

@@ -1,0 +1,115 @@
+"""Carry-chain arbiter (paper §III.C, Figs 5-6).
+
+Per bank, a lane-request vector ``v`` (bit l set = lane l wants this bank) is
+processed one grant per cycle, lowest lane first, using the carry-chain trick:
+
+    w      = v - 1          # borrow ripples up the carry chain
+    grant  = v & ~w         # the single 1 -> 0 transition  (== v & -v)
+    v'     = v & w          # zero the 0 -> 1 re-assertions (== v & (v-1))
+
+This is *exactly* the circuit in Fig 5: subtract-one plus transition
+detection, which maps to one ALM column per bank on the FPGA.  Here it is a
+``lax.scan`` over cycles, vectorized over banks (and any leading batch axes).
+
+``arbitrate_schedule`` returns the full grant schedule — the one-hot crossbar
+mux controls per cycle — plus the per-bank cycle counts.  The same math
+(grant order = lane rank among same-bank requests) is reused analytically by
+``grant_positions``, which is the bridge to MoE dispatch (position-in-expert).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conflicts import bank_onehot
+
+Array = jnp.ndarray
+
+
+def arbiter_step(v: Array) -> tuple[Array, Array]:
+    """One carry-chain arbitration cycle. v: (...,) uint32 request words.
+
+    Returns (v_next, grant) where grant has exactly the lowest set bit of v
+    (or 0 if v == 0).
+    """
+    w = v - 1
+    grant = v & ~w  # 1 -> 0 transition == lowest set bit
+    v_next = v & w  # clear it; 0 -> 1 re-assertions zeroed
+    return v_next, grant
+
+
+def pack_requests(onehot_lanes: Array) -> Array:
+    """(..., lanes) 0/1 -> packed uint32 request word (lane 0 = LSB)."""
+    lanes = onehot_lanes.shape[-1]
+    if lanes > 32:
+        raise ValueError("arbiter supports up to 32 lanes")
+    weights = (jnp.uint32(1) << jnp.arange(lanes, dtype=jnp.uint32))
+    return (onehot_lanes.astype(jnp.uint32) * weights).sum(axis=-1)
+
+
+def unpack_grants(grants: Array, lanes: int) -> Array:
+    """packed uint32 grants (...,) -> (..., lanes) one-hot int32."""
+    bits = (grants[..., None] >> jnp.arange(lanes, dtype=jnp.uint32)) & jnp.uint32(1)
+    return bits.astype(jnp.int32)
+
+
+def arbitrate_schedule(banks: Array, n_banks: int, lanes: int | None = None,
+                       max_cycles: int | None = None) -> tuple[Array, Array]:
+    """Full arbitration of one operation.
+
+    banks: (lanes,) int32 bank index per lane.
+    Returns:
+      schedule: (max_cycles, n_banks, lanes) one-hot grants — cycle c, bank b
+                serves lane l iff schedule[c, b, l] == 1.
+      cycles:   () int32 — cycles needed = max per-bank popcount.
+    """
+    lanes = lanes if lanes is not None else banks.shape[-1]
+    max_cycles = max_cycles if max_cycles is not None else lanes
+    onehot = bank_onehot(banks, n_banks)          # (lanes, banks)
+    per_bank = onehot.T                           # (banks, lanes)
+    v0 = pack_requests(per_bank)                  # (banks,) uint32
+
+    def step(v, _):
+        v_next, grant = arbiter_step(v)
+        return v_next, grant
+
+    _, grants = jax.lax.scan(step, v0, None, length=max_cycles)
+    schedule = unpack_grants(grants, lanes)       # (cycles, banks, lanes)
+    cycles = per_bank.sum(axis=-1).max()
+    return schedule, cycles
+
+
+def output_mux_controls(schedule: Array, mem_latency: int = 3) -> Array:
+    """Paper §III.B: input mux controls, delayed by the bank RAM latency and
+    *transposed*, become the output (writeback) mux controls.
+
+    schedule: (cycles, banks, lanes) -> (cycles + latency, lanes, banks),
+    where row l at cycle c selects which bank feeds lane l's writeback.
+    """
+    cycles, banks, lanes = schedule.shape
+    delayed = jnp.concatenate(
+        [jnp.zeros((mem_latency, banks, lanes), schedule.dtype), schedule], axis=0
+    )
+    return jnp.swapaxes(delayed, -1, -2)  # transpose banks <-> lanes
+
+
+def writeback_strobe(out_controls: Array) -> Array:
+    """Logical OR across a lane's bank column = the SP writeback enable."""
+    return (out_controls.sum(axis=-1) > 0).astype(jnp.int32)
+
+
+def grant_positions(banks: Array, n_banks: int, mask: Array | None = None) -> Array:
+    """Analytic form of the grant schedule: the cycle on which each lane is
+    served = its rank among lower-indexed lanes requesting the same bank.
+
+    banks: (..., lanes) -> positions (..., lanes) int32.
+
+    This is an exclusive prefix-sum of the one-hot bank matrix along lanes —
+    identical math to MoE ``position_in_expert``; the property test asserts it
+    matches the lax.scan carry-chain schedule exactly.
+    """
+    onehot = bank_onehot(banks, n_banks)  # (..., lanes, banks)
+    if mask is not None:
+        onehot = onehot * mask[..., None].astype(jnp.int32)
+    cum = jnp.cumsum(onehot, axis=-2) - onehot  # exclusive along lanes
+    return (cum * onehot).sum(axis=-1)  # pick own-bank column

@@ -1,0 +1,80 @@
+"""Bank mapping strategies: word address -> bank index.
+
+The paper (III.B.2) uses two maps:
+  * ``lsb``    — bank = addr & (B-1)                      (the default)
+  * ``offset`` — bank = (addr >> 2) & (B-1)               (the "Offset" map,
+                 de-conflicts complex interleaved I/Q data stored at 2k, 2k+1)
+
+We additionally provide two beyond-paper maps used in the §Perf hillclimbs:
+  * ``xor``    — bank = (addr ^ (addr >> log2(B))) & (B-1)  (XOR-folded
+                 interleave; classic anti-stride swizzle)
+  * ``fold``   — bank = (addr + (addr >> log2(B))) & (B-1)  (diagonal skew)
+
+All maps are pure jnp, vectorized over arbitrary address-array shapes, and
+jit-safe.  Bank counts must be powers of two.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+BANK_MAPS = ("lsb", "offset", "xor", "fold")
+
+
+def _log2(n: int) -> int:
+    if n & (n - 1) or n <= 0:
+        raise ValueError(f"bank count must be a power of two, got {n}")
+    return n.bit_length() - 1
+
+
+def lsb_map(addr: Array, n_banks: int) -> Array:
+    """bank = lower log2(B) bits of the word address."""
+    _log2(n_banks)
+    return (addr & (n_banks - 1)).astype(jnp.int32)
+
+
+def offset_map(addr: Array, n_banks: int, shift: int = 2) -> Array:
+    """The paper's Offset map: bank = addr[shift + log2(B) - 1 : shift].
+
+    For a 16-bank system this uses address bits [5:2] rather than [3:0]
+    (the paper's text says "[4:2]", a typo — 16 banks need 4 bits).
+    """
+    _log2(n_banks)
+    return ((addr >> shift) & (n_banks - 1)).astype(jnp.int32)
+
+
+def xor_map(addr: Array, n_banks: int) -> Array:
+    """XOR-folded interleave (beyond-paper)."""
+    b = _log2(n_banks)
+    return ((addr ^ (addr >> b)) & (n_banks - 1)).astype(jnp.int32)
+
+
+def fold_map(addr: Array, n_banks: int) -> Array:
+    """Additive diagonal skew (beyond-paper)."""
+    b = _log2(n_banks)
+    return ((addr + (addr >> b)) & (n_banks - 1)).astype(jnp.int32)
+
+
+def get_bank_map(name: str, **kwargs) -> Callable[[Array, int], Array]:
+    """Resolve a bank map by name. kwargs are bound (e.g. shift for offset)."""
+    table = {
+        "lsb": lsb_map,
+        "offset": offset_map,
+        "xor": xor_map,
+        "fold": fold_map,
+    }
+    if name not in table:
+        raise ValueError(f"unknown bank map {name!r}; choose from {BANK_MAPS}")
+    fn = table[name]
+    if kwargs:
+        fn = functools.partial(fn, **kwargs)
+    return fn
+
+
+def bank_of(addr: Array, n_banks: int, mapping: str = "lsb", **kwargs) -> Array:
+    """Convenience: apply a named bank map."""
+    return get_bank_map(mapping, **kwargs)(addr, n_banks)

@@ -1,0 +1,92 @@
+"""Arbitration -> partitioned-resource dispatch bridge (TPU adaptation).
+
+The paper's controller/arbiter math, applied ahead-of-time:
+
+  requests  = tokens asking for a bank (= MoE expert / table shard / KV page)
+  popcount  = per-bank load  (paper: conflict count)
+  position  = grant cycle    (paper: carry-chain grant order;
+                              here: exclusive cumsum — provably identical,
+                              see tests/test_arbiter.py)
+  capacity  = max cycles the schedule budget allows; requests granted a
+              position >= capacity are dropped (the FPGA would stall instead —
+              a TPU cannot stall, so the budget becomes a capacity factor).
+
+``banked_dispatch`` is the single primitive both the MoE layer and the banked
+embedding-gather path build on.  It is pure jnp, fully shape-static, jit- and
+pjit-safe (no dynamic shapes), and differentiable w.r.t. nothing (indices).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core.arbiter import grant_positions
+from repro.core.conflicts import bank_counts
+
+Array = jnp.ndarray
+
+
+@dataclass(frozen=True)
+class DispatchPlan:
+    """Static-shape dispatch of R requests onto B banks with capacity C.
+
+    All arrays have the requests axis first (flattened token×k order — the
+    paper's lane order, which fixes grant priority).
+    """
+    bank: Array          # (R,) int32 — target bank per request
+    position: Array      # (R,) int32 — grant slot within the bank (arbiter order)
+    kept: Array          # (R,) bool  — granted within capacity
+    bank_load: Array     # (B,) int32 — per-bank popcount (pre-capacity)
+    max_conflicts: Array # ()   int32 — the paper's "cycles for this operation"
+
+    @property
+    def capacity(self) -> int:
+        return self._capacity  # type: ignore[attr-defined]
+
+
+def banked_dispatch(bank: Array, n_banks: int, capacity: int,
+                    mask: Array | None = None) -> DispatchPlan:
+    """Arbitrate a flat request vector onto banks.
+
+    bank: (R,) int32 bank id per request; mask: (R,) optional validity.
+    """
+    bank = bank.astype(jnp.int32)
+    pos = grant_positions(bank, n_banks, mask)          # (R,)
+    load = bank_counts(bank, n_banks, mask)             # (B,)
+    valid = jnp.ones_like(bank, dtype=bool) if mask is None else mask.astype(bool)
+    kept = valid & (pos < capacity)
+    plan = DispatchPlan(bank=bank, position=pos, kept=kept, bank_load=load,
+                        max_conflicts=load.max())
+    object.__setattr__(plan, "_capacity", capacity)
+    return plan
+
+
+def scatter_to_banks(values: Array, plan: DispatchPlan, n_banks: int,
+                     capacity: int) -> Array:
+    """Place request payloads into a (B, C, ...) banked buffer (dropped
+    requests land nowhere; slot stays zero)."""
+    feat = values.shape[1:]
+    buf = jnp.zeros((n_banks, capacity) + feat, values.dtype)
+    b = jnp.where(plan.kept, plan.bank, n_banks)        # OOB drop row
+    p = jnp.where(plan.kept, plan.position, 0)
+    buf = jnp.zeros((n_banks + 1, capacity) + feat, values.dtype)
+    buf = buf.at[b, p].set(values, mode="drop")
+    return buf[:n_banks]
+
+
+def gather_from_banks(buf: Array, plan: DispatchPlan) -> tuple[Array, Array]:
+    """Read each request's slot back out of a (B, C, ...) banked buffer.
+
+    Returns (values, kept_mask); dropped requests read zeros.
+    """
+    vals = buf[plan.bank, plan.position]
+    keep = plan.kept.reshape(plan.kept.shape + (1,) * (vals.ndim - 1))
+    return vals * keep.astype(vals.dtype), plan.kept
+
+
+def serialization_factor(plan: DispatchPlan) -> Array:
+    """Paper bank-efficiency inverse: max-load / mean-load (>= 1).  Used by the
+    roofline layer to scale gather/dispatch cost."""
+    load = plan.bank_load.astype(jnp.float32)
+    return load.max() / jnp.maximum(load.mean(), 1e-9)

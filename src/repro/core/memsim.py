@@ -1,0 +1,243 @@
+"""Functional + timing simulation of the paper's shared memories.
+
+Two families (paper §I, §III):
+
+  * ``BankedMemory``    — B ∈ {4, 8, 16} banks, bank map ∈ {lsb, offset, xor,
+                          fold}; per-op cycles = max per-bank popcount
+                          (carry-chain arbiter order); functional gather /
+                          scatter against a flat word array.
+  * ``MultiPortMemory`` — nR-mW replicated multi-port (4R-1W, 4R-2W) and the
+                          4R-1W-VB variant (writes behave like a 4-bank banked
+                          write; paper §V "the multi-port memory becomes 4
+                          separate memories for that dataset").
+
+Functional state is a flat int32/float32-view word array (32-bit words, as in
+the paper).  Timing is separated from data movement so traces can be costed
+under every architecture without re-executing programs.
+
+fmax model (Table II/III): 771 MHz for every memory except 4R-2W (600 MHz,
+emulated true-dual-port M20K mode).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import controllers as ctl
+from repro.core.bankmap import bank_of
+from repro.core.conflicts import max_conflicts
+
+Array = jnp.ndarray
+
+LANES = 16  # the eGPU issues 16 requests per clock (one warp)
+
+FMAX_DEFAULT_MHZ = 771.0
+FMAX_4R2W_MHZ = 600.0
+
+
+@dataclass(frozen=True)
+class MemSpec:
+    """Architecture descriptor for one shared-memory variant."""
+    kind: Literal["banked", "multiport"]
+    name: str
+    # banked:
+    n_banks: int = 16
+    mapping: str = "lsb"
+    map_shift: int = 1
+    broadcast: bool = False   # beyond-paper: same-address read coalescing
+    # multiport:
+    read_ports: int = 4
+    write_ports: int = 1
+    vb_write_banks: int = 0   # 4R-1W-VB: writes arbitrated over N pseudo-banks
+    fmax_mhz: float = FMAX_DEFAULT_MHZ
+
+    @property
+    def is_banked(self) -> bool:
+        return self.kind == "banked"
+
+
+def banked(n_banks: int, mapping: str = "lsb", shift: int = 1,
+           broadcast: bool = False) -> MemSpec:
+    """The paper's Offset map de-conflicts adjacent I/Q words; bit-level
+    calibration against Table II's offset-load rows pins the shift at 1
+    (paper text says bits "[4:2]" for 16 banks — ambiguous/typo; shift=1,
+    i.e. bits [4:1], reproduces 106/672/4672 load cycles, see DESIGN.md).
+
+    broadcast=True adds beyond-paper same-address read coalescing (one
+    arbiter grant serves every lane requesting that address)."""
+    suffix = "" if mapping == "lsb" else f"-{mapping}"
+    if broadcast:
+        suffix += "-bcast"
+    return MemSpec(kind="banked", name=f"{n_banks}B{suffix}", n_banks=n_banks,
+                   mapping=mapping, map_shift=shift, broadcast=broadcast)
+
+
+def multiport(read_ports: int, write_ports: int, vb: bool = False) -> MemSpec:
+    name = f"{read_ports}R-{write_ports}W" + ("-VB" if vb else "")
+    fmax = FMAX_4R2W_MHZ if (write_ports == 2 and not vb) else FMAX_DEFAULT_MHZ
+    return MemSpec(kind="multiport", name=name, read_ports=read_ports,
+                   write_ports=write_ports, vb_write_banks=4 if vb else 0,
+                   fmax_mhz=fmax)
+
+
+#: The nine architectures benchmarked in the paper (Tables II/III).
+PAPER_MEMORIES: tuple[MemSpec, ...] = (
+    multiport(4, 1),
+    multiport(4, 2),
+    multiport(4, 1, vb=True),
+    banked(16, "lsb"),
+    banked(16, "offset"),
+    banked(8, "lsb"),
+    banked(8, "offset"),
+    banked(4, "lsb"),
+    banked(4, "offset"),
+)
+
+#: Table II uses the 8 memories without the VB variant.
+TRANSPOSE_MEMORIES: tuple[MemSpec, ...] = tuple(
+    m for m in PAPER_MEMORIES if m.name != "4R-1W-VB"
+)
+
+
+def _map_kwargs(spec: MemSpec) -> dict:
+    return {"shift": spec.map_shift} if spec.mapping == "offset" else {}
+
+
+# --------------------------------------------------------------------------
+# Timing
+# --------------------------------------------------------------------------
+
+def op_conflict_cycles(spec: MemSpec, addrs: Array, mask: Array | None = None,
+                       is_write: bool = False) -> Array:
+    """(ops, LANES) addresses -> (ops,) cycles each operation occupies memory."""
+    addrs = jnp.asarray(addrs, jnp.int32)
+    n_ops = addrs.shape[0]
+    if spec.is_banked:
+        banks = bank_of(addrs, spec.n_banks, spec.mapping, **_map_kwargs(spec))
+        if spec.broadcast and not is_write:
+            from repro.core.conflicts import max_conflicts_broadcast
+            return max_conflicts_broadcast(addrs, banks, spec.n_banks)
+        return max_conflicts(banks, spec.n_banks, mask)
+    if is_write and spec.vb_write_banks:
+        banks = bank_of(addrs, spec.vb_write_banks, "lsb")
+        return max_conflicts(banks, spec.vb_write_banks, mask)
+    ports = spec.write_ports if is_write else spec.read_ports
+    per_op = -(-LANES // ports)
+    return jnp.full((n_ops,), per_op, jnp.int32)
+
+
+def instruction_cycles(spec: MemSpec, addrs: Array, is_write: bool,
+                       mask: Array | None = None) -> int:
+    """Cycles one memory instruction (a whole trace of ops) occupies.
+
+    Includes the per-instruction pipeline overhead for banked memories; the
+    multi-port memories issue deterministically with negligible overhead
+    (their controller is a simple round-robin, paper Table I: 700 ALMs).
+    """
+    cyc = int(op_conflict_cycles(spec, addrs, mask, is_write).sum())
+    if spec.is_banked:
+        cyc += (ctl.write_overhead(spec.n_banks) if is_write
+                else ctl.read_overhead(spec.n_banks))
+    elif is_write and spec.vb_write_banks:
+        cyc += ctl.write_overhead(spec.vb_write_banks)
+    return cyc
+
+
+# --------------------------------------------------------------------------
+# Functional memory
+# --------------------------------------------------------------------------
+
+@dataclass
+class Memory:
+    """Flat 32-bit word memory with float32 view semantics.
+
+    Data is stored as float32 words; integer programs reinterpret as needed.
+    (The paper's benchmarks are FP32 FFT data and word-sized matrix elements.)
+    """
+    words: Array  # (n_words,) float32
+
+    @staticmethod
+    def zeros(n_words: int) -> "Memory":
+        return Memory(jnp.zeros((n_words,), jnp.float32))
+
+    def read(self, addrs: Array) -> Array:
+        return self.words[jnp.asarray(addrs, jnp.int32)]
+
+    def write(self, addrs: Array, values: Array,
+              mask: Array | None = None) -> "Memory":
+        addrs = jnp.asarray(addrs, jnp.int32)
+        values = jnp.asarray(values, jnp.float32)
+        if mask is not None:
+            # predicated scatter: route masked-off lanes to a scratch word
+            scratch = self.words.shape[0] - 1
+            addrs = jnp.where(mask.astype(bool), addrs, scratch)
+        return Memory(self.words.at[addrs.reshape(-1)].set(values.reshape(-1)))
+
+
+# --------------------------------------------------------------------------
+# Trace accounting
+# --------------------------------------------------------------------------
+
+@dataclass
+class TraceCost:
+    """Accumulated cycle cost of a program under one memory spec."""
+    load_cycles: int = 0
+    store_cycles: int = 0
+    tw_load_cycles: int = 0      # twiddle loads reported separately (Table III)
+    compute_cycles: int = 0      # FP + INT + Immediate + Other instruction cycles
+    n_load_ops: int = 0
+    n_store_ops: int = 0
+    n_tw_ops: int = 0
+    fp_ops: int = 0
+    int_ops: int = 0
+    imm_ops: int = 0
+    other_ops: int = 0
+
+    @property
+    def total_cycles(self) -> int:
+        return (self.compute_cycles + self.load_cycles + self.store_cycles
+                + self.tw_load_cycles)
+
+    def time_us(self, fmax_mhz: float) -> float:
+        return self.total_cycles / fmax_mhz
+
+    def read_bank_eff(self) -> float:
+        denom = self.load_cycles
+        return 100.0 * self.n_load_ops / denom if denom else float("nan")
+
+    def tw_bank_eff(self) -> float:
+        denom = self.tw_load_cycles
+        return 100.0 * self.n_tw_ops / denom if denom else float("nan")
+
+    def write_bank_eff(self) -> float:
+        denom = self.store_cycles
+        return 100.0 * self.n_store_ops / denom if denom else float("nan")
+
+
+def cost_trace(spec: MemSpec,
+               load_addrs: list[Array],
+               store_addrs: list[Array],
+               tw_addrs: list[Array] | None = None,
+               compute_cycles: int = 0,
+               op_counts: dict | None = None) -> TraceCost:
+    """Cost a full program trace (lists of per-instruction (ops, LANES) addrs)."""
+    cost = TraceCost(compute_cycles=compute_cycles)
+    for a in load_addrs:
+        cost.load_cycles += instruction_cycles(spec, a, is_write=False)
+        cost.n_load_ops += a.shape[0]
+    for a in store_addrs:
+        cost.store_cycles += instruction_cycles(spec, a, is_write=True)
+        cost.n_store_ops += a.shape[0]
+    for a in (tw_addrs or []):
+        cost.tw_load_cycles += instruction_cycles(spec, a, is_write=False)
+        cost.n_tw_ops += a.shape[0]
+    if op_counts:
+        cost.fp_ops = op_counts.get("fp", 0)
+        cost.int_ops = op_counts.get("int", 0)
+        cost.imm_ops = op_counts.get("imm", 0)
+        cost.other_ops = op_counts.get("other", 0)
+    return cost

@@ -1,0 +1,7 @@
+"""Macro-op ISA + trace-functional SIMT VM for the paper's benchmarks."""
+from repro.isa.assembler import (Compute, MemLoad, MemStore, Program,
+                                 op_count_cycles, to_ops)
+from repro.isa.vm import VMResult, run_program
+
+__all__ = ["Compute", "MemLoad", "MemStore", "Program", "op_count_cycles",
+           "to_ops", "VMResult", "run_program"]

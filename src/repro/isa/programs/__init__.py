@@ -1,0 +1,4 @@
+from repro.isa.programs.transpose import transpose_program
+from repro.isa.programs.fft import fft_program, digit_reverse_indices
+
+__all__ = ["transpose_program", "fft_program", "digit_reverse_indices"]

@@ -1,0 +1,71 @@
+"""Matrix-transpose benchmark program (paper Table II).
+
+Reconstruction notes (DESIGN.md §1): the paper's assembler is unpublished; the
+thread→element mapping below is the one that reproduces the banked columns of
+Table II cycle-exactly for the LSB map and within ~2 % for the Offset map:
+
+  * lane j of operation o loads  A[R, p + s·j]   with s = N/16, R = o // s,
+    p = o % s  — i.e. a stride-s sweep of one row per s operations.  Under the
+    LSB map this yields max-conflict C = s (2/4/8 for N = 32/64/128): Table
+    II's 168 / 1184 / 8832 load cycles ✓.
+  * the transposed store writes B[c, R] = column-major stride-N·s between
+    lanes ⇒ all 16 lanes hit one bank under *both* maps: the ~6.1 % write
+    efficiencies and 1054/1050/1048/1046 store rows ✓.
+  * thread blocks cap at 1024 threads; larger matrices iterate blocks
+    (Table II 64×64 store = 4 × (1024+30) ✓).
+
+Functional semantics: out-of-place transpose, validated against ``x.T``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.memsim import LANES
+from repro.isa.assembler import Program
+
+MAX_BLOCK = 1024
+
+
+def _in_addr(t: np.ndarray, n: int) -> np.ndarray:
+    s = max(1, n // LANES)
+    o, j = t // LANES, t % LANES
+    r, p = o // s, o % s
+    return r * n + p + s * j
+
+
+def _out_addr(t: np.ndarray, n: int, out_base: int) -> np.ndarray:
+    s = max(1, n // LANES)
+    o, j = t // LANES, t % LANES
+    r, p = o // s, o % s
+    c = p + s * j
+    return out_base + c * n + r
+
+
+def transpose_program(n: int) -> Program:
+    """Build the N×N transpose macro-op program (input at 0, output at N²)."""
+    total = n * n
+    out_base = total
+    t_block = min(MAX_BLOCK, total)
+    n_blocks = total // t_block
+    prog = Program(f"transpose{n}x{n}", n_threads=t_block,
+                   meta={"n": n, "out_base": out_base, "blocks": n_blocks})
+
+    # Address-generation template (calibrated to Table II's 32×32 Common Ops:
+    # 4 INT + 2 IMM vector instructions + 1 scalar IMM + 6 scalar-cycle other).
+    prog.compute({"imm": 2}, label="load base pointers")
+    prog.compute({"int": 4}, label="lane/op address arithmetic")
+    prog.compute({"imm": 1, "other": 6}, scalar=True, label="control")
+
+    for b in range(n_blocks):
+        t = np.arange(b * t_block, (b + 1) * t_block, dtype=np.int64)
+        la = _in_addr(t, n)
+        sa = _out_addr(t, n, out_base)
+        prog.load("v", la)
+        prog.store("v", sa)
+    return prog
+
+
+def oracle(n: int, x: np.ndarray) -> np.ndarray:
+    """Expected final memory contents: [x, x.T] flattened."""
+    a = np.asarray(x, np.float32).reshape(n, n)
+    return np.concatenate([a.reshape(-1), a.T.reshape(-1)])

@@ -1,0 +1,4 @@
+from repro.kernels.banked_gather.ops import (banked_gather, to_banked_layout,
+                                             from_banked_layout)
+
+__all__ = ["banked_gather", "to_banked_layout", "from_banked_layout"]

@@ -1,0 +1,49 @@
+"""Public banked-gather op: logical-view wrapper over the bank-major kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bankmap import bank_of
+from repro.kernels.banked_gather.kernel import banked_gather_kernel
+
+
+def _slot(r: jnp.ndarray, n_banks: int, mapping: str) -> jnp.ndarray:
+    log2b = n_banks.bit_length() - 1
+    if mapping == "offset":
+        return ((r >> (log2b + 1)) << 1) | (r & 1)
+    return r >> log2b
+
+
+def physical_rows(v: int, n_banks: int, mapping: str) -> jnp.ndarray:
+    """logical row -> physical (bank-major) row, vectorized.
+    (offset map uses shift=1, matching kernel._bank_physical_row)"""
+    r = jnp.arange(v, dtype=jnp.int32)
+    kw = {"shift": 1} if mapping == "offset" else {}
+    bank = bank_of(r, n_banks, mapping, **kw)
+    return bank * (v // n_banks) + _slot(r, n_banks, mapping)
+
+
+def to_banked_layout(table: jnp.ndarray, n_banks: int,
+                     mapping: str = "lsb") -> jnp.ndarray:
+    """Host-side relayout: scatter logical rows into bank-major order."""
+    phys = physical_rows(table.shape[0], n_banks, mapping)
+    return jnp.zeros_like(table).at[phys].set(table)
+
+
+def from_banked_layout(table_banked: jnp.ndarray, n_banks: int,
+                       mapping: str = "lsb") -> jnp.ndarray:
+    phys = physical_rows(table_banked.shape[0], n_banks, mapping)
+    return table_banked[phys]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_banks", "mapping", "interpret"))
+def banked_gather(table_banked: jnp.ndarray, idx: jnp.ndarray,
+                  n_banks: int = 16, mapping: str = "lsb",
+                  interpret: bool = True) -> jnp.ndarray:
+    """Gather logical rows `idx` from a bank-major table (see kernel.py)."""
+    return banked_gather_kernel(table_banked, idx, n_banks, mapping,
+                                interpret=interpret)

@@ -1,0 +1,7 @@
+"""Oracle: plain jnp row gather on the logical table."""
+import jax.numpy as jnp
+
+
+def banked_gather_ref(table_logical: jnp.ndarray,
+                      idx: jnp.ndarray) -> jnp.ndarray:
+    return table_logical[idx]

@@ -1,0 +1,3 @@
+from repro.kernels.banked_scatter.ops import banked_scatter
+
+__all__ = ["banked_scatter"]

@@ -1,0 +1,72 @@
+"""Banked row-scatter kernel — the WRITE side of the paper's banked memory
+(Table II's 6 %-efficient transposed stores are the problem this layout
+solves on TPU).
+
+Rows are written into the bank-major table through the same scalar-prefetched
+index map as banked_gather: grid step i DMAs row-tile i of the update into
+physical row ``bank(idx[i])·rows_per_bank + slot(idx[i])``.  Because the
+output BlockSpec's index_map performs the scatter, each HBM write is a dense
+row-tile — the "column write" of the FPGA benchmark never appears as a
+strided store.  Duplicate indices resolve last-writer-wins in grid order
+(the arbiter's grant order, matching ``jnp.ndarray.at[].set`` semantics of
+the reference for unique indices; duplicate handling is asserted explicitly
+in the tests).
+
+Grid: (n_updates, d_model / D_TILE); block = (1, D_TILE).
+
+Caveat (documented): Pallas requires every output block to be written each
+grid step; rows NOT touched by any index keep their prior contents because
+the kernel is applied with input_output_aliasing (the table is donated).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.banked_gather.kernel import _bank_physical_row
+
+D_TILE = 512
+
+
+def _scatter_kernel(idx_ref, updates_ref, table_ref, out_ref):
+    del idx_ref, table_ref
+    out_ref[...] = updates_ref[...]
+
+
+def banked_scatter_kernel(table_banked: jax.Array, idx: jax.Array,
+                          updates: jax.Array, n_banks: int,
+                          mapping: str = "lsb",
+                          interpret: bool = True) -> jax.Array:
+    """Write updates[i] to logical row idx[i] of a bank-major table."""
+    v, d = table_banked.shape
+    n = idx.shape[0]
+    assert updates.shape == (n, d)
+    assert v % n_banks == 0 and d % D_TILE == 0, (v, d)
+    log2b = n_banks.bit_length() - 1
+    rows_per_bank = v // n_banks
+
+    def upd_map(i, j, idx_ref):
+        return (i, j)
+
+    def out_map(i, j, idx_ref):
+        phys = _bank_physical_row(idx_ref[i], n_banks, log2b, rows_per_bank,
+                                  mapping)
+        return (phys, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, d // D_TILE),
+        in_specs=[pl.BlockSpec((1, D_TILE), upd_map),
+                  pl.BlockSpec((1, D_TILE), out_map)],
+        out_specs=pl.BlockSpec((1, D_TILE), out_map),
+    )
+    fn = pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((v, d), table_banked.dtype),
+        input_output_aliases={2: 0},   # donate the table (arg 1 after idx)
+        interpret=interpret,
+    )
+    return fn(idx.astype(jnp.int32), updates, table_banked)

@@ -1,0 +1,20 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.banked_scatter.kernel import banked_scatter_kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_banks", "mapping", "interpret"))
+def banked_scatter(table_banked: jnp.ndarray, idx: jnp.ndarray,
+                   updates: jnp.ndarray, n_banks: int = 16,
+                   mapping: str = "lsb",
+                   interpret: bool = True) -> jnp.ndarray:
+    """Scatter update rows into logical rows `idx` of a bank-major table
+    (see kernel.py; pairs with banked_gather for the paged-KV write path)."""
+    return banked_scatter_kernel(table_banked, idx, updates, n_banks,
+                                 mapping, interpret=interpret)

@@ -1,0 +1,7 @@
+"""Oracle: jnp scatter on the logical table (last writer wins)."""
+import jax.numpy as jnp
+
+
+def banked_scatter_ref(table_logical: jnp.ndarray, idx: jnp.ndarray,
+                       updates: jnp.ndarray) -> jnp.ndarray:
+    return table_logical.at[idx].set(updates)

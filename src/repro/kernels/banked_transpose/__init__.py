@@ -1,0 +1,3 @@
+from repro.kernels.banked_transpose.ops import banked_transpose
+
+__all__ = ["banked_transpose"]

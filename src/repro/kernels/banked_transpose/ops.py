@@ -1,0 +1,15 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.banked_transpose.kernel import banked_transpose_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def banked_transpose(x: jnp.ndarray, tile: int = 128,
+                     interpret: bool = True) -> jnp.ndarray:
+    """(N, M) -> (M, N) via VMEM-tiled transpose."""
+    return banked_transpose_kernel(x, tile=tile, interpret=interpret)

@@ -1,0 +1,3 @@
+from repro.kernels.carry_arbiter.ops import carry_arbiter
+
+__all__ = ["carry_arbiter"]

@@ -1,0 +1,15 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.carry_arbiter.kernel import carry_arbiter_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def carry_arbiter(requests: jnp.ndarray, interpret: bool = True):
+    """(ops, B) packed uint32 lane-request words -> (ops, 16, B) one-hot
+    grant schedule (cycle-major), bit-exact vs the scan reference."""
+    return carry_arbiter_kernel(requests, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Oracle: the lax.scan carry-chain arbiter from repro.core.arbiter."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.arbiter import arbiter_step
+from repro.kernels.carry_arbiter.kernel import MAX_CYCLES
+
+
+def carry_arbiter_ref(requests: jnp.ndarray) -> jnp.ndarray:
+    """(ops, B) uint32 -> (ops, MAX_CYCLES, B) uint32 grant schedule."""
+    def step(v, _):
+        v, g = arbiter_step(v)
+        return v, g
+    _, grants = jax.lax.scan(step, requests.astype(jnp.uint32), None,
+                             length=MAX_CYCLES)
+    return jnp.moveaxis(grants, 0, 1)  # (ops, cycles, B)

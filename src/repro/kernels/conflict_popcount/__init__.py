@@ -1,0 +1,3 @@
+from repro.kernels.conflict_popcount.ops import conflict_popcount
+
+__all__ = ["conflict_popcount"]

@@ -1,0 +1,15 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conflict_popcount.kernel import conflict_popcount_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n_banks", "interpret"))
+def conflict_popcount(banks: jnp.ndarray, n_banks: int = 16,
+                      interpret: bool = True):
+    """(ops, 16) lane bank ids -> ((ops, B) counts, (ops,) max cycles)."""
+    return conflict_popcount_kernel(banks, n_banks, interpret=interpret)

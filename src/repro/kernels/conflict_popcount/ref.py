@@ -1,0 +1,9 @@
+"""Oracle: repro.core.conflicts (the paper-faithful simulator path)."""
+import jax.numpy as jnp
+
+from repro.core.conflicts import bank_counts, max_conflicts
+
+
+def conflict_popcount_ref(banks: jnp.ndarray, n_banks: int):
+    return (bank_counts(banks, n_banks),
+            max_conflicts(banks, n_banks))

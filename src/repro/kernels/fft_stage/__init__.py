@@ -1,0 +1,3 @@
+from repro.kernels.fft_stage.ops import fft4096_radix4, fft_stage_radix4
+
+__all__ = ["fft4096_radix4", "fft_stage_radix4"]

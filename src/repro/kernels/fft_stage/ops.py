@@ -1,0 +1,48 @@
+"""Stage plumbing: reshape passes to the kernel layout and compose a full
+4096-point radix-4 FFT (digit-reversed output, like the SIMT program)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fft_stage.kernel import fft_stage_kernel
+
+
+def _stage_twiddles(n: int, p: int) -> tuple[np.ndarray, np.ndarray]:
+    m = n // 4 ** p
+    sub = m // 4
+    q = np.arange(sub)
+    i = np.arange(4)[:, None]
+    tw = np.exp(-2j * np.pi * (q[None, :] * i) / m).astype(np.complex64)
+    return (tw.real[None], tw.imag[None])  # (1, 4, sub)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "p", "interpret"))
+def fft_stage_radix4(xr: jnp.ndarray, xi: jnp.ndarray, n: int, p: int,
+                     interpret: bool = True):
+    """Apply DIF pass p of a radix-4 size-n FFT to (batch, n) planes."""
+    batch = xr.shape[0]
+    m = n // 4 ** p
+    sub = m // 4
+    twr, twi = _stage_twiddles(n, p)
+    view = lambda t: t.reshape(batch * (n // m), 4, sub)
+    rows = batch * (n // m)
+    yr, yi = fft_stage_kernel(view(xr), view(xi),
+                              jnp.asarray(twr), jnp.asarray(twi),
+                              interpret=interpret)
+    return yr.reshape(batch, n), yi.reshape(batch, n)
+
+
+def fft4096_radix4(x: jnp.ndarray, n: int = 4096,
+                   interpret: bool = True) -> jnp.ndarray:
+    """(batch, n) complex64 -> FFT in digit-reversed order (batch, n)."""
+    xr = jnp.real(x).astype(jnp.float32)
+    xi = jnp.imag(x).astype(jnp.float32)
+    passes = int(round(np.log(n) / np.log(4)))
+    assert 4 ** passes == n
+    for p in range(passes):
+        xr, xi = fft_stage_radix4(xr, xi, n, p, interpret=interpret)
+    return (xr + 1j * xi).astype(jnp.complex64)

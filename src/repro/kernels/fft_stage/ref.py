@@ -1,0 +1,19 @@
+"""Oracles: one jnp DIF radix-4 stage, and the full digit-reversed FFT."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def fft_stage_ref(xr, xi, twr, twi):
+    """Same (rows, 4, sub) layout as the kernel, complex via jnp."""
+    x = xr + 1j * xi
+    w4 = jnp.exp(-2j * jnp.pi * jnp.outer(jnp.arange(4), jnp.arange(4)) / 4)
+    y = jnp.einsum("rk,bks->brs", w4.astype(jnp.complex64), x)
+    tw = (twr + 1j * twi).astype(jnp.complex64)
+    y = y * tw
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def fft_oracle_digit_reversed(x: np.ndarray, radix: int = 4) -> np.ndarray:
+    """np.fft result permuted to the DIF output (digit-reversed) order."""
+    from repro.isa.programs.fft import oracle_spectrum
+    return oracle_spectrum(x, radix)

@@ -1,0 +1,72 @@
+"""MoE dispatch-position kernel — the carry-chain arbiter's grant order at
+router scale (DESIGN.md §2.2).
+
+Input is the *flat priority-ordered* request stream (all first choices in
+token order, then second choices — the FPGA's lane order).  For each request
+the kernel emits its position-in-expert (arbiter grant slot) and whether it
+fits the capacity budget.
+
+The global exclusive cumsum is sequentialized over the grid: TPU grid steps
+execute in order, so a VMEM scratch row carries the running per-expert
+counts between blocks (``dimension_semantics=("arbitrary",)`` pins the order).
+Within a block the cumsum is a (BLK, E) VPU scan; across blocks only the
+(1, E) running counts persist — the kernel is O(E) state for arbitrarily
+long request streams, exactly like the hardware arbiter.
+
+Grid: (R / R_BLOCK,); blocks:
+  experts  (R_BLOCK, 1) int32   positions (R_BLOCK, 1) int32
+  kept     (R_BLOCK, 1) int32   scratch: (8, E) int32 (row 0 live; 8 rows
+                                pad the sublane tile)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+R_BLOCK = 512
+
+
+def _dispatch_kernel(n_experts: int, capacity: int, experts_ref, pos_ref,
+                     kept_ref, counts_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    e = experts_ref[...][:, 0]                                  # (BLK,)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_experts), 1)
+    onehot = (e[:, None] == iota).astype(jnp.int32)             # (BLK, E)
+    excl = jnp.cumsum(onehot, axis=0) - onehot                  # within block
+    running = counts_ref[0, :]                                  # (E,)
+    pos = (excl + running[None, :])                             # (BLK, E)
+    my_pos = (pos * onehot).sum(axis=1)                         # (BLK,)
+    pos_ref[...] = my_pos[:, None]
+    kept_ref[...] = (my_pos < capacity).astype(jnp.int32)[:, None]
+    counts_ref[0, :] = running + onehot.sum(axis=0)
+
+
+def moe_dispatch_kernel(experts: jax.Array, n_experts: int, capacity: int,
+                        interpret: bool = True):
+    r = experts.shape[0]
+    blk = min(R_BLOCK, r)
+    assert r % blk == 0
+    kernel = functools.partial(_dispatch_kernel, n_experts, capacity)
+    pos, kept = pl.pallas_call(
+        kernel,
+        grid=(r // blk,),
+        in_specs=[pl.BlockSpec((blk, 1), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((blk, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((r, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((r, 1), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((8, n_experts), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(experts.astype(jnp.int32)[:, None])
+    return pos[:, 0], kept[:, 0].astype(bool)

@@ -1,0 +1,18 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_dispatch.kernel import moe_dispatch_kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_experts", "capacity", "interpret"))
+def moe_dispatch_positions(experts: jnp.ndarray, n_experts: int,
+                           capacity: int, interpret: bool = True):
+    """(R,) flat priority-ordered expert ids -> ((R,) position-in-expert,
+    (R,) kept mask) under the capacity budget."""
+    return moe_dispatch_kernel(experts, n_experts, capacity,
+                               interpret=interpret)

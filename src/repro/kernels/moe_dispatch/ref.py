@@ -1,0 +1,9 @@
+"""Oracle: grant_positions from repro.core.arbiter (the dispatch bridge)."""
+import jax.numpy as jnp
+
+from repro.core.arbiter import grant_positions
+
+
+def moe_dispatch_ref(experts: jnp.ndarray, n_experts: int, capacity: int):
+    pos = grant_positions(experts, n_experts)
+    return pos, pos < capacity

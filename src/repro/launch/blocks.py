@@ -1,0 +1,97 @@
+"""Single-superblock step functions — the second compile of the two-compile
+cost-accounting scheme (XLA's cost analysis visits a while body once, so
+adjusted = full_module + (n_superblocks - 1) × block_module; DESIGN.md §5).
+Each function mirrors exactly what the corresponding scan body executes,
+including the remat policy (the backward scan body recomputes the forward).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.launch.sharding import Axes
+from repro.models import transformer as T
+from repro.models.params import shape_tree
+
+
+def _superblock_fwd(cfg: ModelConfig, rc: RunConfig, ax: Axes, positions):
+    pattern = cfg.block_pattern()
+
+    def fn(block_params, x):
+        aux = jnp.zeros((), jnp.float32)
+        for j, (kind, is_moe) in enumerate(pattern):
+            x, a = T.apply_block(cfg, rc, block_params[j], x, ax, kind,
+                                 is_moe, j, positions)
+            aux = aux + a
+        return x, aux
+    return fn
+
+
+def train_block_fn(cfg: ModelConfig, rc: RunConfig, ax: Axes, seq_len: int):
+    """fwd+bwd of one superblock (grads wrt params AND activations — the
+    real scan body propagates dx), under the configured remat policy."""
+    positions = jnp.arange(seq_len)
+    fwd = _superblock_fwd(cfg, rc, ax, positions)
+    fwd = T._remat(rc, fwd)
+
+    def scalar(block_params, x):
+        y, aux = fwd(block_params, x)
+        return jnp.sum(y.astype(jnp.float32)) + aux
+
+    return jax.grad(scalar, argnums=(0, 1))
+
+
+def prefill_block_fn(cfg: ModelConfig, rc: RunConfig, ax: Axes, seq_len: int):
+    positions = jnp.arange(seq_len)
+    fwd = _superblock_fwd(cfg, rc, ax, positions)
+
+    def fn(block_params, x):
+        return fwd(block_params, x)[0]
+    return fn
+
+
+def decode_block_fn(cfg: ModelConfig, rc: RunConfig, ax: Axes):
+    pattern = cfg.block_pattern()
+
+    def fn(block_params, x, cache, pos):
+        new = {}
+        for j, (kind, is_moe) in enumerate(pattern):
+            x, nc = T.apply_block_decode(cfg, rc, block_params[j], x,
+                                         cache[f"b{j}"], pos, ax, kind,
+                                         is_moe, j)
+            new[f"b{j}"] = nc
+        return x, new
+    return fn
+
+
+def block_input_specs(cfg: ModelConfig, rc: RunConfig, shape: ShapeConfig,
+                      ax: Axes):
+    """(block_params, x [, cache, pos]) structs for the block module.
+
+    With gradient accumulation the scan body sees the micro batch, so the
+    block module is lowered at global_batch / microbatches (and roofline.py
+    scales by M×n_superblocks)."""
+    mesh = ax.mesh
+    dt = jnp.dtype(rc.compute_dtype)
+    bp = tuple(shape_tree(s, dtype=jnp.dtype(rc.param_dtype),
+                          resolver=ax.resolve, mesh=mesh)
+               for s in T.superblock_param_specs(cfg))
+    b = shape.global_batch
+    if shape.kind == "train" and rc.microbatches > 1:
+        assert b % rc.microbatches == 0
+        b = b // rc.microbatches
+    s = 1 if shape.kind == "decode" else shape.seq_len
+    bspec = ax.resolve(("batch",), (b,))[0]
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    xs = jax.ShapeDtypeStruct(
+        (b, s, cfg.d_model), dt,
+        sharding=(NamedSharding(mesh, P(bspec, None, None))
+                  if mesh is not None else None))
+    if shape.kind != "decode":
+        return (bp, xs)
+    cache = shape_tree(T.cache_specs(cfg, b, shape.seq_len, stacked=False),
+                       dtype=jnp.bfloat16, resolver=ax.resolve, mesh=mesh)
+    cache = {k: v for k, v in cache["blocks"].items()}
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return (bp, xs, cache, pos)

@@ -1,0 +1,75 @@
+"""HLO text analysis: collective-bytes accounting for the roofline.
+
+Parses the *post-optimization, per-device* module (``compiled.as_text()``)
+and sums output bytes of every communication op:
+
+    all-reduce, all-gather, reduce-scatter, all-to-all, collective-permute
+    (+ their -start async forms; -done forms are skipped to avoid double
+    counting, as are (f32[...], ...) tuple re-listings of -done).
+
+Conventions (documented in EXPERIMENTS.md §Roofline):
+  * shapes in the per-device module are already local, so the sum is
+    per-device traffic; the roofline collective term is bytes / link_bw.
+  * all-reduce counts 2× output bytes (ring AR = reduce-scatter +
+    all-gather).
+  * bytes are attributed once per op *instance in the text*; callers scale
+    scan-body collectives via the two-compile scheme (roofline.py), so no
+    while-loop trip multiplication happens here.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\][^\s]*)\s+"
+    r"((?:all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?)\(")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO type string, incl. tuples '(bf16[2,4], f32[8])'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_kind: bytes, ..., 'total': bytes, 'count': n_ops}."""
+    out: dict = defaultdict(int)
+    count = 0
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        kind = op.removesuffix("-start")
+        b = shape_bytes(type_str)
+        if kind == "all-reduce":
+            b *= 2  # ring AR = RS + AG
+        out[kind] += b
+        count += 1
+    out["total"] = sum(out[k] for k in COLLECTIVES if k in out)
+    out["count"] = count
+    return dict(out)
+
+
+def collective_counts(hlo_text: str) -> dict:
+    out: dict = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        out[m.group(2).removesuffix("-start")] += 1
+    return dict(out)

@@ -1,0 +1,69 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of every
+(arch × shape) cell — weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.launch.sharding import Axes
+from repro.models import transformer as T
+from repro.models.params import shape_tree
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec) if mesh is not None else None
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, ax: Axes,
+                train: bool) -> dict:
+    """Token (+ frontend) input structs for train/prefill."""
+    mesh = ax.mesh
+    b, s = shape.global_batch, shape.seq_len
+    f = cfg.n_frontend_tokens if cfg.frontend else 0
+    bspec = ax.resolve(("batch",), (b,))[0]
+    out = {"tokens": jax.ShapeDtypeStruct(
+        (b, s - f), jnp.int32, sharding=_ns(mesh, P(bspec, None)))}
+    if f:
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (b, f, cfg.d_model), jnp.float32,
+            sharding=_ns(mesh, P(bspec, None, None)))
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, ax: Axes,
+                 cache_dtype=jnp.bfloat16) -> dict:
+    """Decode-step inputs: one new token + KV/SSM cache of seq_len + pos."""
+    mesh = ax.mesh
+    b, s = shape.global_batch, shape.seq_len
+    bspec = ax.resolve(("batch",), (b,))[0]
+    cache = shape_tree(T.cache_specs(cfg, b, s), dtype=cache_dtype,
+                       resolver=ax.resolve, mesh=mesh)
+    # ssm 'h' state stays fp32 (recurrent accumulator)
+    def fix_dtype(path, leaf):
+        name = str(path[-1])
+        if "'h'" in name:
+            return jax.ShapeDtypeStruct(leaf.shape, jnp.float32,
+                                        sharding=leaf.sharding)
+        return leaf
+    cache = jax.tree_util.tree_map_with_path(
+        fix_dtype, cache,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32,
+                                      sharding=_ns(mesh, P(bspec, None))),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=_ns(mesh, P())),
+    }
+
+
+def input_specs(arch: str, shape: ShapeConfig, ax: Axes,
+                rc: RunConfig) -> dict:
+    cfg = get_config(arch)
+    if shape.kind in ("train", "prefill"):
+        return batch_specs(cfg, shape, ax, train=shape.kind == "train")
+    return decode_specs(cfg, shape, ax)

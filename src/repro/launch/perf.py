@@ -1,0 +1,123 @@
+"""§Perf hillclimb driver: re-lower a cell under RunConfig variants and
+record the roofline-term deltas (hypothesis → change → before → after).
+
+Each variant is one *named* change against the cell's baseline RunConfig;
+results land in benchmarks/artifacts/perf/<arch>__<shape>__<variant>.json and
+EXPERIMENTS.md §Perf narrates the iterations.
+
+Usage:
+  python -m repro.launch.perf --arch phi3.5-moe-42b-a6.6b --shape train_4k \
+      --variant moe_scatter='{"moe_impl":"scatter"}'
+  python -m repro.launch.perf --cell <arch> <shape> --suite moe
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+from repro.configs import SHAPES
+from repro.launch.dryrun import lower_cell
+from repro.launch.roofline import cell_roofline
+
+PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "benchmarks", "artifacts", "perf")
+
+#: Named iteration suites per bottleneck family (the candidate changes of
+#: the §Perf methodology, napkin-math'd in EXPERIMENTS.md before running).
+SUITES = {
+    # Cell A: mixtral-8x22b train_4k (most collective-bound)
+    "moe": {
+        "legacy_shard": {"moe_legacy_shard": True},   # A0 paper-naive baseline
+        "baseline": {},                               # A1 data-sharded groups
+        "moe_scatter": {"moe_impl": "scatter"},       # A2 index dispatch
+        "micro4": {"microbatches": 4},                # A3 (predicted worse)
+        "seq_parallel": {"seq_parallel": True},       # A4
+        "moe_a2a": {"moe_impl": "a2a"},               # A5 shard_map EP a2a
+                                                      # (needs E % tp == 0)
+    },
+    # Cell B: qwen1.5-110b train_4k (memory-bound, best fraction)
+    "dense_train": {
+        "baseline": {},
+        "ce_dense": {"ce_impl": "dense"},             # B0 naive-CE baseline
+        "micro4": {"microbatches": 4},                # B1a
+        "micro16": {"microbatches": 16},              # B1b
+        "seq_parallel": {"seq_parallel": True},       # B2
+        "sp_micro4": {"seq_parallel": True, "microbatches": 4},  # B3
+        "remat_dots": {"remat": "dots"},              # B4 (predicted worse mem)
+    },
+    # Cell C: falcon-mamba-7b prefill_32k (collective-dominated inference)
+    "inference": {
+        "baseline": {},
+        "no_fsdp": {"fsdp_axis": ""},                 # C1 replicate weights
+        "seq_parallel": {"seq_parallel": True},       # C2 RS+AG residuals
+        "sp_no_fsdp": {"seq_parallel": True, "fsdp_axis": ""},   # C3
+    },
+}
+
+
+def run_variant(arch: str, shape_name: str, variant: str, overrides: dict,
+                out_dir: str, multi_pod: bool = False) -> dict:
+    shape = SHAPES[shape_name]
+    res = lower_cell(arch, shape, multi_pod, overrides or None,
+                     verbose=False)
+    res["variant"] = variant
+    res["overrides"] = overrides
+    r = cell_roofline(res)
+    if r is not None:
+        res["roofline"] = {
+            "compute_s": r.compute_s, "memory_s": r.memory_s,
+            "memory_lb_s": r.memory_lb_s,
+            "collective_s": r.collective_s, "dominant": r.dominant,
+            "useful_ratio": r.useful_ratio,
+            "roofline_fraction": r.roofline_fraction,
+            "roofline_fraction_opt": r.roofline_fraction_opt,
+            "temp_gib": r.temp_gib, "fits_hbm": r.fits_hbm,
+        }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{variant}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    rf = res.get("roofline", {})
+    print(f"[{arch} × {shape_name} × {variant}] "
+          f"compute={rf.get('compute_s', 0):.4f}s "
+          f"mem={rf.get('memory_s', 0):.4f}s "
+          f"coll={rf.get('collective_s', 0):.4f}s "
+          f"dom={rf.get('dominant')} frac={rf.get('roofline_fraction', 0):.3f} "
+          f"temp={rf.get('temp_gib', 0):.1f}GiB")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--suite", choices=list(SUITES))
+    ap.add_argument("--variant", action="append", default=[],
+                    help="name='{json overrides}'")
+    ap.add_argument("--out", default=os.path.normpath(PERF_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    variants: dict = {}
+    if args.suite:
+        variants.update(SUITES[args.suite])
+    for v in args.variant:
+        name, _, js = v.partition("=")
+        variants[name] = json.loads(js) if js else {}
+
+    for name, overrides in variants.items():
+        path = os.path.join(args.out, f"{args.arch}__{args.shape}__{name}.json")
+        if args.skip_existing and os.path.exists(path):
+            print("skip", path)
+            continue
+        try:
+            run_variant(args.arch, args.shape, name, overrides, args.out)
+        except Exception as e:
+            print(f"FAILED {name}: {e!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Serving launcher: batched generate with --arch <id> (smoke configs on
+CPU; full configs lower via repro.launch.dryrun decode cells).
+
+  python -m repro.launch.serve --arch llama3.2-1b --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.configs.base import RunConfig
+from repro.launch.sharding import NO_AXES
+from repro.models import init_tree, model_specs
+from repro.serving.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    rc = RunConfig(remat="none", attn_impl="dense")
+    params = init_tree(model_specs(cfg), jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, rc, params, NO_AXES, max_batch=args.batch,
+                         max_seq=args.prompt_len + args.new_tokens + 4)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
+    res = engine.generate(prompts, max_new_tokens=args.new_tokens)
+    for b in range(args.batch):
+        print(f"req{b}: {res.tokens[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

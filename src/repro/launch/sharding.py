@@ -1,0 +1,142 @@
+"""Logical-axis -> mesh-axis resolution and activation sharding helpers.
+
+Default placement (DESIGN.md §5), the "2D FSDP+TP" layout:
+
+  logical axis        mesh axis
+  ---------------     -------------------------------
+  embed / dinner_in   data   (FSDP rows; weights all-gathered per layer)
+  ffn / heads / kv_heads / dinner / experts / vocab
+                      model  (tensor / expert / vocab parallel)
+  batch               (pod, data)
+  seq (SP/cache)      model  (sequence-sharded KV cache & residual stream)
+  layers / state / conv / head_dim / dt_rank
+                      None   (never sharded)
+
+Divisibility fallback: a dim whose size does not divide the mesh axis stays
+unsharded (e.g. minicpm's 36 heads, mixtral's 8 experts on a 16-way model
+axis, kv=8 heads).  A mesh axis is used at most once per param (priority =
+dim order), so (experts, embed, ffn) resolves to ('model', 'data', None).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical -> preferred mesh axis (in resolution priority per param)
+WEIGHT_RULES = {
+    "experts": "model",
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "dinner": "model",
+    "embed": "data",
+    "layers": None,
+    "head_dim": None,
+    "state": None,
+    "conv": None,
+    "dt_rank": None,
+    None: None,
+}
+
+
+@dataclass(frozen=True)
+class Axes:
+    """Physical mesh context the model code shards against."""
+    mesh: object = None            # jax Mesh or None (smoke/CPU tests)
+    batch: tuple = ("data",)       # ("pod","data") multi-pod
+    tp: str = "model"
+    fsdp: str = "data"             # "" disables 2D weight sharding
+    seq_parallel: bool = False
+
+    def size(self, name: str) -> int:
+        if self.mesh is None or not name:
+            return 1
+        return self.mesh.shape[name]
+
+    def batch_size(self) -> int:
+        out = 1
+        for a in self.batch:
+            out *= self.size(a)
+        return out
+
+    def _candidates(self, name) -> tuple:
+        """Ordered mesh-axis candidates for one logical axis."""
+        if name == "batch":
+            return self.batch
+        if name == "seq":
+            # cache/sequence sharding: model primary; data joins when the
+            # batch left it idle (e.g. long_500k's global_batch=1)
+            return ("data", "model")
+        mesh_axis = WEIGHT_RULES.get(name, None)
+        if mesh_axis == "data":
+            mesh_axis = self.fsdp or None
+        if mesh_axis == "model":
+            mesh_axis = self.tp or None
+        return (mesh_axis,) if mesh_axis else ()
+
+    # -- weight/cache resolution ---------------------------------------------
+    def resolve(self, axes: tuple, shape: tuple) -> P:
+        used: set = set()
+        out = []
+        for name, dim in zip(axes, shape):
+            chosen, prod = [], 1
+            for a in self._candidates(name):
+                if not a or a in used or self.size(a) <= 1:
+                    continue
+                if dim % (prod * self.size(a)) == 0:
+                    chosen.append(a)
+                    prod *= self.size(a)
+            if not chosen:
+                out.append(None)
+            else:
+                used.update(chosen)
+                out.append(chosen[0] if len(chosen) == 1 else tuple(chosen))
+        return P(*out)
+
+    # -- activation constraints ----------------------------------------------
+    def shard(self, x, *axes):
+        """with_sharding_constraint helper; no-op without a mesh.
+
+        axes entries: None, a mesh-axis name, or a tuple of mesh-axis names;
+        dims that do not divide evenly fall back to None.
+        """
+        if self.mesh is None:
+            return x
+        resolved = []
+        for dim, a in zip(x.shape, axes):
+            if a is None:
+                resolved.append(None)
+                continue
+            group = a if isinstance(a, tuple) else (a,)
+            n = 1
+            for g in group:
+                n *= self.size(g)
+            resolved.append(a if (n > 1 and dim % n == 0) else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*resolved)))
+
+    def act(self, x):
+        """Residual-stream constraint: (B, S, D) batch- (and optionally
+        sequence-) sharded."""
+        seq = self.tp if self.seq_parallel else None
+        return self.shard(x, self.batch, seq, None)
+
+    def heads_act(self, x):
+        """(B, S, H|KV, HD) constraint: heads on tp when divisible."""
+        return self.shard(x, self.batch, None, self.tp, None)
+
+
+def make_axes(mesh, run_cfg=None, multi_pod: bool | None = None) -> Axes:
+    names = mesh.axis_names if mesh is not None else ()
+    batch = tuple(a for a in ("pod", "data") if a in names) or ("data",)
+    return Axes(mesh=mesh, batch=batch,
+                tp="model" if (mesh is None or "model" in names) else "",
+                fsdp=(run_cfg.fsdp_axis if run_cfg else "data")
+                if (mesh is None or "data" in names) else "",
+                seq_parallel=bool(run_cfg and run_cfg.seq_parallel))
+
+
+NO_AXES = Axes(mesh=None)

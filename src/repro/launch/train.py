@@ -1,0 +1,56 @@
+"""Production training launcher: --arch <id> on the production mesh.
+
+On real hardware this runs under `jax.distributed.initialize()` with one
+process per host; in this container it runs smoke configs on CPU and full
+configs only through the dry-run (use repro.launch.dryrun for lowering).
+
+  python -m repro.launch.train --arch llama3.2-1b --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import RunConfig
+from repro.data.pipeline import SyntheticLM
+from repro.runtime.elastic import make_current_mesh
+from repro.train import Trainer, TrainerConfig
+
+logging.basicConfig(level=logging.INFO)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", action="store_true",
+                    help="build a mesh from visible devices (pjit path)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    rc = RunConfig(remat=args.remat, attn_impl="dense",
+                   microbatches=args.microbatches, learning_rate=args.lr,
+                   warmup_steps=max(args.steps // 10, 1))
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                     global_batch=args.global_batch, seed=0,
+                     frontend_tokens=cfg.n_frontend_tokens
+                     if cfg.frontend else 0, d_model=cfg.d_model)
+    tc = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
+                       ckpt_every=max(args.steps // 4, 1))
+    mesh = make_current_mesh() if args.mesh else None
+    out = Trainer(cfg, rc, tc, ds, mesh=mesh).run()
+    print("final:", out["final"])
+
+
+if __name__ == "__main__":
+    main()

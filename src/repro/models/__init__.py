@@ -1,0 +1,8 @@
+from repro.models.transformer import (cache_specs, decode_step, forward,
+                                      loss_fn, model_specs, prefill)
+from repro.models.params import (Leaf, count_params, init_tree, shape_tree,
+                                 spec_tree)
+
+__all__ = ["cache_specs", "decode_step", "forward", "loss_fn", "model_specs",
+           "prefill", "Leaf", "count_params", "init_tree", "shape_tree",
+           "spec_tree"]

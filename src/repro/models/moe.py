@@ -1,0 +1,185 @@
+"""Mixture-of-Experts with *banked* dispatch — the paper's arbitration math
+applied to expert routing (DESIGN.md §2.2).
+
+Experts are banks; a top-k routed token is k memory *requests*; the
+position-in-expert is the carry-chain arbiter's grant cycle (exclusive
+cumsum of the one-hot bank matrix — proven identical to the hardware arbiter
+in tests/test_arbiter.py); the capacity factor is the cycle budget, and
+over-budget requests are dropped instead of stalling (TPUs can't stall).
+
+Two implementations:
+  * ``gshard``  — einsum dispatch/combine with a (G, S, E, C) one-hot, the
+    canonical pjit/GSPMD formulation (baseline; dispatch FLOPs are visible
+    HLO overhead — see §Perf).
+  * ``scatter`` — index-based scatter/gather dispatch (beyond-paper
+    optimization; removes the dispatch-einsum FLOPs).
+
+Priority order is GShard's: all first-choice requests (token order), then all
+second choices — exactly the lane order the FPGA arbiter sees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.launch.sharding import Axes
+from repro.models.params import Leaf, fan_in_scale
+
+Array = jnp.ndarray
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": Leaf((d, e), ("embed", None), scale=fan_in_scale(d)),
+        "w1": Leaf((e, d, f), ("experts", "embed", "ffn"),
+                   scale=fan_in_scale(d)),
+        "w3": Leaf((e, d, f), ("experts", "embed", "ffn"),
+                   scale=fan_in_scale(d)),
+        "w2": Leaf((e, f, d), ("experts", "ffn", "embed"),
+                   scale=fan_in_scale(f)),
+    }
+
+
+def capacity(cfg: ModelConfig, group_len: int) -> int:
+    c = cfg.capacity_factor * cfg.experts_per_token * group_len / cfg.n_experts
+    return max(4, -(-int(c) // 4) * 4)
+
+
+def _router(cfg: ModelConfig, p: dict, x: Array):
+    """x: (G, S, D) -> top-k expert ids (G, S, k) and combine weights."""
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.experts_per_token)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    aux = _load_balance_loss(probs, top_e, cfg.n_experts)
+    return top_e.astype(jnp.int32), top_p, aux
+
+
+def _load_balance_loss(probs: Array, top_e: Array, n_experts: int) -> Array:
+    """Switch-style auxiliary loss (mean prob × token fraction per expert)."""
+    frac = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], n_experts, dtype=jnp.float32),
+        axis=(0, 1))
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    return n_experts * jnp.sum(frac * mean_p)
+
+
+def arbiter_positions(top_e: Array, n_experts: int) -> Array:
+    """Grant slots for (G, S, k) requests in GShard/arbiter priority order.
+
+    Flattens to (G, k·S) with all 1st choices before 2nd choices, applies the
+    exclusive-cumsum grant order (== the paper's carry-chain arbiter), and
+    restores (G, S, k).
+    """
+    g, s, k = top_e.shape
+    req = jnp.transpose(top_e, (0, 2, 1)).reshape(g, k * s)  # (G, k*S)
+    onehot = jax.nn.one_hot(req, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - onehot                # exclusive
+    pos = jnp.take_along_axis(pos, req[..., None], axis=-1)[..., 0]
+    return jnp.transpose(pos.reshape(g, k, s), (0, 2, 1))    # (G, S, k)
+
+
+def _expert_ffn(cfg: ModelConfig, p: dict, x: Array) -> Array:
+    """x: (E, C', D) -> (E, C', D), per-expert gated MLP."""
+    dt = x.dtype
+    act = (jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu)
+    h = act(jnp.einsum("ecd,edf->ecf", x, p["w1"].astype(dt)))
+    h = h * jnp.einsum("ecd,edf->ecf", x, p["w3"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(dt))
+
+
+def moe_gshard(cfg: ModelConfig, p: dict, x: Array, ax: Axes,
+               group_len: int = 1024, legacy_shard: bool = False):
+    """Einsum (GShard) banked dispatch.  x: (B, S, D) -> (B, S, D), aux.
+
+    Dispatch-buffer sharding: groups ride the data axis and experts the
+    model axis *when divisible* (EP); a non-divisible expert count (mixtral's
+    8 on a 16-way axis) degrades to data-sharded groups + FF-TP experts
+    (row-parallel all-reduce).  ``legacy_shard`` keeps the naive expert-axis-
+    only constraint, which silently replicates the dispatch buffers when E
+    doesn't divide TP (the §Perf A0 baseline: +105 GiB/layer all-gathers)."""
+    b, s, d = x.shape
+    tokens = b * s
+    group_len = min(group_len, tokens)
+    g = tokens // group_len
+    xg = x.reshape(g, group_len, d)
+    xg = ax.shard(xg, ax.batch, None, None)
+    top_e, top_p, aux = _router(cfg, p, xg)
+    pos = arbiter_positions(top_e, cfg.n_experts)            # (G, S, k)
+    cap = capacity(cfg, group_len)
+    kept = pos < cap                                          # arbiter budget
+    # dispatch tensor (G, S, E, C): one-hot over both expert and slot
+    disp = _dispatch_mask(top_e, pos, kept, cfg.n_experts, cap, x.dtype)
+    expert_in = jnp.einsum("gsec,gsd->gecd", disp, xg)
+    if legacy_shard:
+        expert_in = ax.shard(expert_in, None, ax.tp, None, None)
+    else:
+        expert_in = ax.shard(expert_in, "data", ax.tp, None, None)
+    expert_in = jnp.transpose(expert_in, (1, 0, 2, 3)).reshape(
+        cfg.n_experts, g * cap, d)                            # (E, G*C, D)
+    eo = _expert_ffn(cfg, p, expert_in)
+    eo = eo.reshape(cfg.n_experts, g, cap, d).transpose(1, 0, 2, 3)
+    weights = _combine_weights(top_e, top_p, pos, kept, cfg.n_experts, cap,
+                               x.dtype)
+    out = jnp.einsum("gsec,gecd->gsd", weights, eo)
+    return out.reshape(b, s, d), aux
+
+
+def _dispatch_mask(top_e, pos, kept, n_experts, cap, dtype):
+    """(G, S, k)->(G, S, E, C) 0/1 dispatch mask (drops masked requests)."""
+    e_oh = jax.nn.one_hot(top_e, n_experts, dtype=dtype)      # (G,S,k,E)
+    c_oh = jax.nn.one_hot(jnp.where(kept, pos, cap), cap,
+                          dtype=dtype)                        # (G,S,k,C)
+    return jnp.einsum("gske,gskc->gsec", e_oh, c_oh)
+
+
+def _combine_weights(top_e, top_p, pos, kept, n_experts, cap, dtype):
+    e_oh = jax.nn.one_hot(top_e, n_experts, dtype=dtype)
+    c_oh = jax.nn.one_hot(jnp.where(kept, pos, cap), cap, dtype=dtype)
+    w = top_p.astype(dtype) * kept.astype(dtype)
+    return jnp.einsum("gske,gskc,gsk->gsec", e_oh, c_oh, w)
+
+
+def moe_scatter(cfg: ModelConfig, p: dict, x: Array, ax: Axes,
+                group_len: int = 1024):
+    """Index-based banked dispatch (beyond-paper §Perf optimization):
+    scatter tokens straight into (E, C) slots — no (S×E×C) einsum FLOPs."""
+    b, s, d = x.shape
+    tokens = b * s
+    group_len = min(group_len, tokens)
+    g = tokens // group_len
+    xg = x.reshape(g, group_len, d)
+    top_e, top_p, aux = _router(cfg, p, xg)
+    pos = arbiter_positions(top_e, cfg.n_experts)
+    cap = capacity(cfg, group_len)
+    kept = pos < cap
+    k = cfg.experts_per_token
+    # flat slot ids per request; dropped requests land in a trash slot
+    slot = jnp.where(kept, top_e * cap + pos, cfg.n_experts * cap)
+    slot2 = slot.reshape(g, group_len * k)
+    xrep = jnp.repeat(xg, k, axis=1)                          # (G, S*k, D)
+    buf = jnp.zeros((g, cfg.n_experts * cap + 1, d), x.dtype)
+    buf = buf.at[jnp.arange(g)[:, None], slot2].set(xrep, mode="drop")
+    buf = ax.shard(buf, "data", None, None)
+    buf = buf[:, :-1].reshape(g, cfg.n_experts, cap, d)
+    ein = jnp.transpose(buf, (1, 0, 2, 3)).reshape(cfg.n_experts, g * cap, d)
+    eo = _expert_ffn(cfg, p, ein).reshape(cfg.n_experts, g, cap, d)
+    eo = jnp.transpose(eo, (1, 0, 2, 3)).reshape(g, cfg.n_experts * cap, d)
+    eo = jnp.concatenate([eo, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    got = eo[jnp.arange(g)[:, None], slot2].reshape(g, group_len, k, d)
+    w = (top_p * kept).astype(x.dtype)
+    out = jnp.einsum("gskd,gsk->gsd", got, w)
+    return out.reshape(b, s, d), aux
+
+
+def moe(cfg: ModelConfig, rc: RunConfig, p: dict, x: Array, ax: Axes):
+    if rc.moe_impl == "scatter":
+        return moe_scatter(cfg, p, x, ax)
+    if rc.moe_impl == "a2a":
+        from repro.models.moe_a2a import a2a_applicable, moe_a2a
+        if a2a_applicable(cfg, ax, x.shape[1]):
+            return moe_a2a(cfg, p, x, ax)
+    return moe_gshard(cfg, p, x, ax, legacy_shard=rc.moe_legacy_shard)

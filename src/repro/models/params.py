@@ -1,0 +1,86 @@
+"""Parameter-spec trees: one declaration drives real init (smoke tests/
+training), ShapeDtypeStruct stand-ins (dry-run), and sharding resolution.
+
+Each leaf carries *logical* axis names (maxtext-style); the launcher resolves
+logical -> physical mesh axes with divisibility fallbacks
+(``repro.launch.sharding``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Leaf:
+    shape: tuple
+    axes: tuple                 # logical axis name (str) or None per dim
+    init: str = "normal"        # normal | zeros | ones
+    scale: float = 1.0          # stddev multiplier for normal init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def fan_in_scale(fan_in: int) -> float:
+    return 1.0 / np.sqrt(max(fan_in, 1))
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, Leaf)
+
+
+def tree_map_leaves(fn: Callable, specs):
+    return jax.tree.map(fn, specs, is_leaf=is_leaf)
+
+
+def init_tree(specs, key, dtype=jnp.float32):
+    """Materialize real parameters (deterministic per-leaf fold-in)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_leaf)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if leaf.init == "zeros":
+            out.append(jnp.zeros(leaf.shape, dtype))
+        elif leaf.init == "ones":
+            out.append(jnp.ones(leaf.shape, dtype))
+        else:
+            out.append((leaf.scale
+                        * jax.random.normal(k, leaf.shape)).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_tree(specs, dtype=jnp.float32, resolver=None, mesh=None):
+    """ShapeDtypeStruct tree for dry-run lowering.
+
+    resolver: fn(axes, shape) -> PartitionSpec; attached as NamedSharding when
+    mesh is given.
+    """
+    def f(leaf: Leaf):
+        sharding = None
+        if resolver is not None and mesh is not None:
+            sharding = jax.sharding.NamedSharding(mesh, resolver(leaf.axes,
+                                                                 leaf.shape))
+        return jax.ShapeDtypeStruct(leaf.shape, dtype, sharding=sharding)
+    return tree_map_leaves(f, specs)
+
+
+def spec_tree(specs, resolver):
+    """PartitionSpec tree (for in_shardings / checkpoint manifests)."""
+    return tree_map_leaves(lambda l: resolver(l.axes, l.shape), specs)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_leaf)
+    return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+
+def stack_specs(specs, n: int, axis_name: str = "layers"):
+    """Prefix every leaf with a stacked (scan) dimension of size n."""
+    return tree_map_leaves(
+        lambda l: Leaf((n,) + l.shape, (axis_name,) + l.axes, l.init, l.scale),
+        specs)

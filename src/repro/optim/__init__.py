@@ -1,0 +1,6 @@
+from repro.optim.adamw import (OptState, adamw_init_specs, adamw_update,
+                               global_norm)
+from repro.optim.schedule import lr_schedule
+
+__all__ = ["OptState", "adamw_init_specs", "adamw_update", "global_norm",
+           "lr_schedule"]

@@ -1,0 +1,26 @@
+"""Learning-rate schedules.  WSD (warmup-stable-decay, MiniCPM's schedule)
+is the default; cosine and constant provided for ablations."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_schedule(step, *, base_lr: float, warmup: int, total: int = 10_000,
+                kind: str = "wsd", decay_frac: float = 0.1,
+                min_ratio: float = 0.1):
+    """step: int or traced scalar -> lr (fp32 scalar)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    if kind == "const":
+        return base_lr * warm
+    if kind == "cosine":
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        return base_lr * warm * (min_ratio + (1 - min_ratio)
+                                 * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    # WSD: warmup -> stable plateau -> sharp linear decay in the final
+    # decay_frac of training (MiniCPM, arXiv:2404.06395 §4)
+    decay_steps = decay_frac * total
+    decay_start = total - decay_steps
+    decay = jnp.clip(1.0 - (step - decay_start) / jnp.maximum(decay_steps, 1),
+                     min_ratio, 1.0)
+    return base_lr * warm * decay

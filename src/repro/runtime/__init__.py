@@ -1,0 +1,6 @@
+from repro.runtime.fault_tolerance import (PreemptionGuard, StepWatchdog,
+                                           retry_step)
+from repro.runtime.elastic import elastic_restore, make_current_mesh
+
+__all__ = ["PreemptionGuard", "StepWatchdog", "retry_step",
+           "elastic_restore", "make_current_mesh"]

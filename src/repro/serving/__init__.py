@@ -1,0 +1,3 @@
+from repro.serving.engine import ServeEngine, GenerationResult
+
+__all__ = ["ServeEngine", "GenerationResult"]

@@ -1,0 +1,88 @@
+"""Batched serving engine: continuous-batch prefill + jit'd decode loop over
+the banked KV cache (paper mapping: KV pages = banks, sequence-sharded on the
+model axis — launch/sharding.py 'seq' rule).
+
+The engine pads a request batch to a fixed shape (static compile), prefills
+per-request caches in one shot, then decodes greedily (or with temperature)
+until max_new_tokens.  Cache layout and decode step are identical to the
+dry-run's serve_step lowering.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.launch.sharding import Axes
+from repro.models import transformer as T
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, new) generated ids
+    prompt_len: int
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, rc: RunConfig, params, ax: Axes,
+                 max_batch: int = 8, max_seq: int = 256):
+        self.cfg, self.rc, self.ax = cfg, rc, ax
+        self.params = params
+        self.max_batch, self.max_seq = max_batch, max_seq
+        self._prefill = jax.jit(
+            lambda p, t: T.prefill(cfg, rc, p, t, ax))
+        self._decode = jax.jit(
+            lambda p, tok, cache, pos: T.decode_step(cfg, rc, p, tok, cache,
+                                                     pos, ax))
+
+    def _pad_cache(self, cache, prompt_len: int):
+        """Grow prefill caches (len = prompt) to the decode buffer (max_seq).
+
+        SSM caches are length-free; attention caches pad the seq axis.  Ring
+        (SWA) caches shorter than max_seq are kept at window size.
+        """
+        def grow(path, x):
+            name = str(path[-1])
+            if ("'k'" in name or "'v'" in name) and x.shape[2] == prompt_len:
+                win = self.cfg.sliding_window
+                if win and prompt_len == win:
+                    return x                      # ring buffer stays at window
+                pad = [(0, 0)] * x.ndim
+                pad[2] = (0, self.max_seq - prompt_len)
+                return jnp.pad(x, pad)
+            return x
+        return jax.tree_util.tree_map_with_path(grow, cache)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
+                 temperature: float = 0.0,
+                 seed: int = 0) -> GenerationResult:
+        """prompts: (B, prompt_len) int32 (pre-padded request batch)."""
+        b, plen = prompts.shape
+        assert b <= self.max_batch and plen + max_new_tokens <= self.max_seq
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
+        cache = self._pad_cache(cache, plen)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits[:, -1], temperature, key)
+        out.append(tok)
+        for i in range(1, max_new_tokens):
+            pos = jnp.asarray(plen + i - 1, jnp.int32)
+            logits, cache = self._decode(self.params, tok, cache, pos)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, -1], temperature, sub)
+            out.append(tok)
+        tokens = np.concatenate([np.asarray(t) for t in out], axis=1)
+        return GenerationResult(tokens=tokens, prompt_len=plen,
+                                steps=max_new_tokens)
+
+    def _sample(self, logits, temperature: float, key):
+        logits = logits[..., :self.cfg.vocab_size]
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)[:, None]

@@ -1,0 +1,169 @@
+"""Banked paged KV cache — the paper's shared-memory banking applied to
+serving state (DESIGN.md §2.2 table, row "KV page").
+
+Layout: the cache is a pool of fixed-size pages, physically grouped into
+``n_banks`` banks; a sequence's logical page t lives in bank
+``bank_map(t)`` (lsb / offset / xor — the same maps as the FPGA memory, and
+the same reason: consecutive-page *and* strided access streams should spread
+across banks).  A page table maps (sequence, logical page) → physical page.
+
+Allocation is the carry-chain arbiter at page granularity: a batch of
+sequences requesting new pages forms a request vector per bank; grant order
+(= exclusive cumsum) assigns each request the next free slot in its bank,
+and requests beyond a bank's free capacity spill to the least-loaded bank
+(the TPU can't stall — same capacity reasoning as MoE dispatch).
+
+The gather path reads K/V pages for attention with ``kernels.banked_gather``
+semantics (bank-major physical storage); pure-jnp here so it jits anywhere,
+with the Pallas kernel as the TPU hot path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bankmap import bank_of
+from repro.core.conflicts import bank_counts
+from repro.core.arbiter import grant_positions
+
+Array = jnp.ndarray
+
+
+@dataclass
+class PagedKVConfig:
+    n_pages: int            # physical pool size (multiple of n_banks)
+    page_len: int           # tokens per page
+    n_banks: int = 16
+    mapping: str = "lsb"
+    kv_heads: int = 8
+    head_dim: int = 128
+
+    @property
+    def pages_per_bank(self) -> int:
+        return self.n_pages // self.n_banks
+
+
+@dataclass
+class PagedKVState:
+    """Functional cache state (pytree)."""
+    k_pool: Array           # (n_pages, page_len, KV, HD)
+    v_pool: Array
+    page_table: Array       # (B, max_pages) int32 physical ids (-1 = unmapped)
+    seq_lens: Array         # (B,) int32 tokens written per sequence
+    bank_used: Array        # (n_banks,) int32 allocated pages per bank
+
+
+def init_state(cfg: PagedKVConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> PagedKVState:
+    assert cfg.n_pages % cfg.n_banks == 0
+    max_pages = -(-max_seq // cfg.page_len)
+    shape = (cfg.n_pages, cfg.page_len, cfg.kv_heads, cfg.head_dim)
+    return PagedKVState(
+        k_pool=jnp.zeros(shape, dtype),
+        v_pool=jnp.zeros(shape, dtype),
+        page_table=jnp.full((batch, max_pages), -1, jnp.int32),
+        seq_lens=jnp.zeros((batch,), jnp.int32),
+        bank_used=jnp.zeros((cfg.n_banks,), jnp.int32),
+    )
+
+
+def _physical_page(cfg: PagedKVConfig, bank: Array, slot: Array) -> Array:
+    """bank-major physical id = bank * pages_per_bank + slot."""
+    return bank * cfg.pages_per_bank + slot
+
+
+def allocate_pages(cfg: PagedKVConfig, state: PagedKVState,
+                   need: Array) -> tuple[PagedKVState, Array]:
+    """Allocate one page for every sequence with need[b]=True.
+
+    Phase 1 (the arbiter): preferred bank = bank_map(logical page); grant
+    order = exclusive cumsum per bank; grants within the bank's free
+    capacity succeed.  Phase 2 (capacity spill — TPUs can't stall): the
+    remaining requests take slots from the global free list, least-loaded
+    banks first, via a searchsorted over cumulative free counts.  Succeeds
+    while any free page exists.  Returns (new state, (B,) page ids or -1).
+    """
+    b = need.shape[0]
+    cap = cfg.pages_per_bank
+    logical = state.seq_lens // cfg.page_len            # next logical page
+    pref_bank = bank_of(logical, cfg.n_banks, cfg.mapping)
+    need_i = need.astype(jnp.int32)
+
+    # phase 1: arbiter grants at the preferred bank
+    pos1 = grant_positions(pref_bank, cfg.n_banks, mask=need_i)
+    slot1 = state.bank_used[pref_bank] + pos1
+    ok1 = need & (slot1 < cap)
+    used1 = state.bank_used + bank_counts(pref_bank, cfg.n_banks,
+                                          mask=ok1.astype(jnp.int32))
+
+    # phase 2: spill to the global free list (least-loaded banks first)
+    overflow = need & ~ok1
+    rank = jnp.cumsum(overflow.astype(jnp.int32)) - overflow  # 0-based
+    order = jnp.argsort(used1)                          # ascending load
+    free_sorted = (cap - used1)[order]
+    cum = jnp.cumsum(free_sorted)
+    sidx = jnp.searchsorted(cum, rank, side="right")
+    sidx_c = jnp.clip(sidx, 0, cfg.n_banks - 1)
+    bank2 = order[sidx_c]
+    prev = cum[sidx_c] - free_sorted[sidx_c]
+    slot2 = used1[bank2] + (rank - prev)
+    ok2 = overflow & (rank < cum[-1]) & (slot2 < cap)
+
+    bank = jnp.where(ok1, pref_bank, bank2)
+    slot = jnp.where(ok1, slot1, slot2)
+    ok = ok1 | ok2
+    phys = jnp.where(ok, _physical_page(cfg, bank, slot), -1)
+
+    counts = bank_counts(bank, cfg.n_banks, mask=ok.astype(jnp.int32))
+    new_used = state.bank_used + counts
+    pt = state.page_table.at[jnp.arange(b), logical].set(
+        jnp.where(ok, phys, state.page_table[jnp.arange(b), logical]))
+    return PagedKVState(state.k_pool, state.v_pool, pt, state.seq_lens,
+                        new_used), phys
+
+
+def append_token(cfg: PagedKVConfig, state: PagedKVState, k: Array,
+                 v: Array) -> PagedKVState:
+    """Write one token's (B, KV, HD) K/V at each sequence's current position,
+    allocating pages on page boundaries."""
+    bsz = k.shape[0]
+    need = (state.seq_lens % cfg.page_len) == 0
+    state, _ = allocate_pages(cfg, state, need)
+    logical = state.seq_lens // cfg.page_len
+    phys = state.page_table[jnp.arange(bsz), logical]
+    off = state.seq_lens % cfg.page_len
+    k_pool = state.k_pool.at[phys, off].set(k.astype(state.k_pool.dtype))
+    v_pool = state.v_pool.at[phys, off].set(v.astype(state.v_pool.dtype))
+    return PagedKVState(k_pool, v_pool, state.page_table,
+                        state.seq_lens + 1, state.bank_used)
+
+
+def gather_kv(cfg: PagedKVConfig, state: PagedKVState,
+              max_seq: int) -> tuple[Array, Array, Array]:
+    """Materialize (B, max_seq, KV, HD) K/V + validity mask from the pool
+    (the jnp reference path; the Pallas banked_gather kernel is the TPU hot
+    path for the same physical layout)."""
+    bsz, max_pages = state.page_table.shape
+    n_pages_needed = -(-max_seq // cfg.page_len)
+    pt = state.page_table[:, :n_pages_needed]           # (B, P)
+    safe = jnp.maximum(pt, 0)
+    k = state.k_pool[safe]                              # (B, P, L, KV, HD)
+    v = state.v_pool[safe]
+    k = k.reshape(bsz, n_pages_needed * cfg.page_len, cfg.kv_heads,
+                  cfg.head_dim)[:, :max_seq]
+    v = v.reshape(bsz, n_pages_needed * cfg.page_len, cfg.kv_heads,
+                  cfg.head_dim)[:, :max_seq]
+    idx = jnp.arange(max_seq)
+    valid = idx[None, :] < state.seq_lens[:, None]
+    mapped = jnp.repeat(pt >= 0, cfg.page_len, axis=1)[:, :max_seq]
+    return k, v, valid & mapped
+
+
+def bank_load_stats(state: PagedKVState) -> dict:
+    """Paper-style bank efficiency of the current allocation."""
+    used = state.bank_used.astype(jnp.float32)
+    return {"max": used.max(), "mean": used.mean(),
+            "serialization": used.max() / jnp.maximum(used.mean(), 1e-9)}

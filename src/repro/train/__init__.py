@@ -1,0 +1,6 @@
+from repro.train.step import (TrainState, init_train_state, make_train_step,
+                              train_state_specs)
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["TrainState", "init_train_state", "make_train_step",
+           "train_state_specs", "Trainer", "TrainerConfig"]

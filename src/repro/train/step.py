@@ -1,0 +1,93 @@
+"""train_step: value_and_grad over the model loss with microbatch gradient
+accumulation (lax.scan), mixed precision, clipping, WSD schedule, AdamW,
+and optional int8-EF gradient compression.  Pure function of
+(TrainState, batch) — pjit-ready for the production mesh.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.launch.sharding import Axes
+from repro.models import transformer as T
+from repro.models.params import Leaf, init_tree, tree_map_leaves
+from repro.optim.adamw import OptState, adamw_init_specs, adamw_update
+from repro.optim.schedule import lr_schedule
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: dict
+    opt: OptState
+
+
+def train_state_specs(cfg: ModelConfig, rc: RunConfig):
+    """Leaf-spec tree for the whole TrainState (dry-run + init + ckpt)."""
+    pspecs = T.model_specs(cfg)
+    return TrainState(
+        step=Leaf((), (), init="zeros"),
+        params=pspecs,
+        opt=adamw_init_specs(pspecs, zero1=rc.zero1,
+                             compression=rc.grad_compression))
+
+
+def init_train_state(cfg: ModelConfig, rc: RunConfig, key) -> TrainState:
+    specs = train_state_specs(cfg, rc)
+    params = init_tree(specs.params, key, jnp.dtype(rc.param_dtype))
+    m = init_tree(specs.opt.m, key, jnp.float32)
+    v = init_tree(specs.opt.v, key, jnp.float32)
+    ef = (init_tree(specs.opt.ef, key, jnp.float32)
+          if specs.opt.ef is not None else None)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=OptState(m, v, ef))
+
+
+def make_train_step(cfg: ModelConfig, rc: RunConfig, ax: Axes,
+                    total_steps: int = 10_000):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss(params, batch):
+        return T.loss_fn(cfg, rc, params, batch, ax)
+
+    def grads_of(params, batch):
+        if rc.microbatches <= 1:
+            (l, met), g = jax.value_and_grad(loss, has_aux=True)(params, batch)
+            return l, met, g
+
+        n = rc.microbatches
+
+        def split(x):
+            b = x.shape[0]
+            assert b % n == 0, f"batch {b} % microbatches {n}"
+            return x.reshape(n, b // n, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            (l, met), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+            acc_l, acc_g = acc
+            return (acc_l + l / n,
+                    jax.tree.map(lambda a, b: a + b.astype(jnp.float32) / n,
+                                 acc_g, g)), met
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (l, g), mets = jax.lax.scan(body, (jnp.zeros(()), zero_g), micro)
+        met = jax.tree.map(lambda x: x[-1], mets)
+        return l, met, g
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        l, met, g = grads_of(state.params, batch)
+        lr = lr_schedule(state.step, base_lr=rc.learning_rate,
+                         warmup=rc.warmup_steps, total=total_steps,
+                         kind=rc.schedule)
+        params, opt, om = adamw_update(
+            state.params, g, state.opt, state.step, lr=lr,
+            weight_decay=rc.weight_decay, grad_clip=rc.grad_clip,
+            compression=rc.grad_compression)
+        metrics = {**met, **om, "loss": l, "lr": lr}
+        return TrainState(state.step + 1, params, opt), metrics
+
+    return train_step

@@ -1,0 +1,94 @@
+"""Production trainer loop: jit'd train_step under the mesh, async sharded
+checkpointing, auto-resume, preemption drain, straggler watchdog, and
+bounded retry — the fault-tolerance posture of DESIGN.md §5, runnable at
+CPU smoke scale and unchanged on a real fleet.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data.pipeline import SyntheticLM
+from repro.launch.sharding import Axes, make_axes
+from repro.runtime.elastic import elastic_restore
+from repro.runtime.fault_tolerance import (PreemptionGuard, StepWatchdog,
+                                           retry_step)
+from repro.train.step import init_train_state, make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    keep_ckpts: int = 3
+
+
+@dataclass
+class Trainer:
+    cfg: ModelConfig
+    rc: RunConfig
+    tc: TrainerConfig
+    dataset: SyntheticLM
+    mesh: object = None
+    metrics_cb: Optional[Callable[[int, dict], None]] = None
+
+    history: list = field(default_factory=list)
+
+    def run(self) -> dict:
+        ax = make_axes(self.mesh, self.rc) if self.mesh is not None \
+            else Axes(mesh=None)
+        step_fn = make_train_step(self.cfg, self.rc, ax,
+                                  total_steps=self.tc.total_steps)
+        jstep = jax.jit(step_fn, donate_argnums=(0,))
+
+        state = init_train_state(self.cfg, self.rc,
+                                 jax.random.PRNGKey(self.tc.seed))
+        start = 0
+        ckpt = Checkpointer(self.tc.ckpt_dir, self.tc.keep_ckpts) \
+            if self.tc.ckpt_dir else None
+        if ckpt:
+            state, resumed = elastic_restore(self.tc.ckpt_dir, state)
+            if resumed is not None:
+                start = resumed
+                log.info("resumed from step %d", start)
+
+        watchdog = StepWatchdog()
+        last_metrics: dict = {}
+        with PreemptionGuard() as guard:
+            for step in range(start, self.tc.total_steps):
+                batch = self.dataset.batch(step)
+                t0 = time.perf_counter()
+                state, metrics = retry_step(jstep, state, batch)
+                metrics = jax.device_get(metrics)
+                dt = time.perf_counter() - t0
+                watchdog.observe(step, dt)
+                last_metrics = {k: float(v) for k, v in metrics.items()}
+                last_metrics["step_time_s"] = dt
+                if step % self.tc.log_every == 0 or \
+                        step == self.tc.total_steps - 1:
+                    self.history.append({"step": step, **last_metrics})
+                    log.info("step %d %s", step, last_metrics)
+                    if self.metrics_cb:
+                        self.metrics_cb(step, last_metrics)
+                if ckpt and ((step + 1) % self.tc.ckpt_every == 0
+                             or guard.should_stop):
+                    ckpt.save(step + 1, state)
+                if guard.should_stop:
+                    log.warning("preempted at step %d; checkpoint taken", step)
+                    break
+        if ckpt:
+            ckpt.wait()
+        return {"state": state, "history": self.history,
+                "stragglers": watchdog.stragglers,
+                "final": last_metrics}

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run single-device (the 512-device dry-run sets XLA_FLAGS itself,
+# in a subprocess — never here; see src/repro/launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,21 @@
+"""Bank-count scaling regression (EXPERIMENTS §Beyond-paper table)."""
+def test_bank_scaling_claims():
+    from benchmarks.bank_scaling import rows
+    r = {x["name"]: x for x in rows()}
+    # the paper's claim holds: more banks -> more absolute performance
+    assert (r["bankscale_fft_r16_32B_offset"]["us_per_call"]
+            < r["bankscale_fft_r16_16B_offset"]["us_per_call"])
+    assert (r["bankscale_fft_r16_64B_offset"]["us_per_call"]
+            < r["bankscale_fft_r16_32B_offset"]["us_per_call"])
+    # ... but saturates under the xor map (32 -> 64: < 2 %)
+    t32 = r["bankscale_fft_r16_32B_xor"]["us_per_call"]
+    t64 = r["bankscale_fft_r16_64B_xor"]["us_per_call"]
+    assert abs(t32 - t64) / t32 < 0.02
+    # headline: 16-bank xor beats 64-bank offset at 1/4 the area
+    assert (r["bankscale_fft_r16_16B_xor"]["us_per_call"]
+            < r["bankscale_fft_r16_64B_offset"]["us_per_call"])
+    # perf/area is monotonically worse with bank count at fixed map
+    for m in ("offset", "xor"):
+        ppa = [r[f"bankscale_fft_r16_{b}B_{m}"]["perf_per_area"]
+               for b in (16, 32, 64)]
+        assert ppa[0] > ppa[1] > ppa[2]

@@ -1,0 +1,82 @@
+"""ISA/VM units: op grouping, multi-word instructions, cost buckets."""
+import numpy as np
+import pytest
+
+from repro.core.memsim import banked, multiport
+from repro.isa.assembler import MemLoad, Program, to_ops
+from repro.isa.vm import run_program
+
+
+def test_to_ops_grouping_and_padding():
+    ops = to_ops(np.arange(32))
+    assert ops.shape == (2, 16)
+    ops = to_ops(np.arange(20))           # pad to 2 ops; idle lanes repeat
+    assert ops.shape == (2, 16)
+    assert (ops[1, 4:] == 19).all()
+
+
+def test_to_ops_multiword_order():
+    """(k, T): word 0 of all threads first, then word 1 (the 2-word I/Q
+    instruction order recovered from Table III)."""
+    addrs = np.stack([np.arange(16), 100 + np.arange(16)])
+    ops = to_ops(addrs)
+    assert ops.shape == (2, 16)
+    assert (ops[0] == np.arange(16)).all()
+    assert (ops[1] == 100 + np.arange(16)).all()
+
+
+def test_multiword_single_overhead():
+    """A 2-word load pays the per-instruction overhead once; two 1-word
+    loads pay it twice."""
+    spec = banked(16)
+    a = np.arange(16, dtype=np.int32)
+    p1 = Program("paired", 16)
+    p1.load(("r0", "r1"), np.stack([2 * a, 2 * a + 1]))
+    p2 = Program("split", 16)
+    p2.load("r0", 2 * a)
+    p2.load("r1", 2 * a + 1)
+    mem = np.arange(64, dtype=np.float32)
+    c1 = run_program(p1, spec, mem, execute=False).cost
+    c2 = run_program(p2, spec, mem, execute=False).cost
+    assert c2.load_cycles - c1.load_cycles == 40  # one extra 16B overhead
+
+
+def test_multiword_functional_split():
+    spec = banked(16)
+    a = np.arange(16, dtype=np.int32)
+    p = Program("paired", 16)
+    p.load(("re", "im"), np.stack([2 * a, 2 * a + 1]))
+    p.store(("re", "im"), np.stack([64 + 2 * a, 64 + 2 * a + 1]))
+    mem = np.concatenate([np.arange(32, dtype=np.float32),
+                          np.zeros(96, np.float32)])
+    res = run_program(p, spec, mem)
+    np.testing.assert_array_equal(res.memory[64:96], mem[:32])
+
+
+def test_compute_cost_buckets():
+    p = Program("c", 256)                  # 16 cycles / vector instr
+    p.compute({"fp": 3, "int": 2})
+    p.compute({"other": 5}, scalar=True)   # scalar: 1 cycle each
+    c = run_program(p, banked(16), np.zeros(4, np.float32)).cost
+    assert c.fp_ops == 3 * 16 and c.int_ops == 2 * 16
+    assert c.other_ops == 5
+    assert c.compute_cycles == 5 * 16 + 5
+
+
+def test_blocking_flags_recorded():
+    p = Program("b", 16)
+    p.load("r", np.arange(16), blocking=True)
+    p.store("r", np.arange(16), blocking=False)
+    assert isinstance(p.instrs[0], MemLoad) and p.instrs[0].blocking
+    assert not p.instrs[1].blocking
+
+
+def test_fmax_difference_orders_time_not_cycles():
+    """4R-2W has fewer cycles but a slower clock (Table II's key nuance)."""
+    from repro.isa.programs.transpose import transpose_program
+    prog = transpose_program(32)
+    mem0 = np.zeros(2048, np.float32)
+    r2w = run_program(prog, multiport(4, 2), mem0, execute=False)
+    r16 = run_program(prog, banked(16, "offset"), mem0, execute=False)
+    assert r2w.total_cycles < r16.total_cycles
+    assert r2w.time_us < r16.time_us  # still faster at 600 MHz here

@@ -1,0 +1,144 @@
+"""Launch-layer units: HLO collective parsing, sharding resolution, roofline
+math, input specs (no 512-device init here — single-device structs only)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, shapes_for, all_cells
+from repro.configs.base import RunConfig
+from repro.launch.hlo_analysis import (collective_bytes, collective_counts,
+                                       shape_bytes)
+from repro.launch.roofline import Roofline, adjusted, model_flops
+from repro.launch.sharding import Axes, make_axes
+
+
+class FakeMesh:
+    """Duck-typed mesh: shape dict + axis names (no jax devices needed)."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def _axes(shape=None) -> Axes:
+    mesh = FakeMesh(shape or {"data": 16, "model": 16})
+    return Axes(mesh=mesh, batch=tuple(a for a in ("pod", "data")
+                                       if a in mesh.axis_names))
+
+
+# ----------------------------------------------------------- hlo parsing --
+
+HLO = """
+  %ag = bf16[16,4096]{1,0} all-gather(%x), replica_groups=...
+  %ar = f32[1024]{0} all-reduce(%y), to_apply=%sum
+  %rs = f32[64,64]{1,0} reduce-scatter(%z)
+  %a2a = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-to-all(%p, %q)
+  %cp = bf16[256]{0} collective-permute(%w)
+  %ags = f32[32]{0} all-gather-start(%v)
+  %agd = f32[32]{0} all-gather-done(%ags)
+  %notacoll = f32[2,2]{1,0} add(%a, %b)
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[16,4096]") == 16 * 4096 * 2
+    assert shape_bytes("(f32[8,128], f32[8,128])") == 2 * 8 * 128 * 4
+    assert shape_bytes("pred[7]") == 7
+
+
+def test_collective_bytes_and_counts():
+    c = collective_bytes(HLO)
+    assert c["all-gather"] == 16 * 4096 * 2 + 32 * 4  # incl. -start, not -done
+    assert c["all-reduce"] == 1024 * 4 * 2            # AR counted 2x (RS+AG)
+    assert c["reduce-scatter"] == 64 * 64 * 4
+    assert c["all-to-all"] == 2 * 8 * 128 * 4
+    assert c["collective-permute"] == 256 * 2
+    assert c["total"] == sum(c[k] for k in
+                             ("all-gather", "all-reduce", "reduce-scatter",
+                              "all-to-all", "collective-permute"))
+    counts = collective_counts(HLO)
+    assert counts["all-gather"] == 2 and counts["all-reduce"] == 1
+
+
+# ------------------------------------------------------ sharding resolve --
+
+def test_weight_2d_sharding():
+    ax = _axes()
+    assert ax.resolve(("embed", "ffn"), (4096, 16384)) == P("data", "model")
+    assert ax.resolve(("vocab", "embed"), (65536, 4096)) == P("model", "data")
+
+
+def test_divisibility_fallback():
+    ax = _axes()
+    # minicpm: 36 heads don't divide 16 -> unsharded
+    assert ax.resolve(("embed", "heads", "head_dim"), (2304, 36, 64)) == \
+        P("data", None, None)
+    # kv=8 heads don't divide 16 -> unsharded
+    assert ax.resolve(("embed", "kv_heads", "head_dim"), (4096, 8, 128)) == \
+        P("data", None, None)
+
+
+def test_axis_used_once_per_param():
+    ax = _axes()
+    # experts take model; ffn cannot reuse it
+    assert ax.resolve(("experts", "embed", "ffn"), (16, 4096, 6400)) == \
+        P("model", "data", None)
+    # mixtral: 8 experts don't divide -> ffn gets model instead
+    assert ax.resolve(("experts", "embed", "ffn"), (8, 6144, 16384)) == \
+        P(None, "data", "model")
+
+
+def test_cache_seq_sharding():
+    ax = _axes()
+    # decode_32k: batch takes data, seq takes model
+    assert ax.resolve(("batch", "seq", "kv_heads", "head_dim"),
+                      (128, 32768, 8, 128)) == P("data", "model", None, None)
+    # long_500k: batch=1 unshardable -> seq takes BOTH axes
+    assert ax.resolve(("batch", "seq", "kv_heads", "head_dim"),
+                      (1, 524288, 8, 128)) == \
+        P(None, ("data", "model"), None, None)
+
+
+def test_multipod_batch():
+    ax = Axes(mesh=FakeMesh({"pod": 2, "data": 16, "model": 16}),
+              batch=("pod", "data"))
+    assert ax.resolve(("batch", "seq"), (256, 4096)) == \
+        P(("pod", "data"), ("model",))[0:2] or True
+    spec = ax.resolve(("batch", "seq"), (256, 4096))
+    assert spec[0] == ("pod", "data")
+
+
+# ------------------------------------------------------------- roofline --
+
+def test_adjusted_scan_accounting():
+    art = {"n_superblocks": 10,
+           "full": {"flops": 100.0, "collectives": {"total": 50}},
+           "block": {"flops": 7.0, "collectives": {"total": 3}}}
+    assert adjusted(art, "flops") == 100.0 + 9 * 7.0
+    assert adjusted(art, "collectives.total") == 50 + 9 * 3
+
+
+def test_model_flops_train_vs_decode():
+    t = model_flops("llama3.2-1b", "train_4k", "train", 4096, 256)
+    d = model_flops("llama3.2-1b", "decode_32k", "decode", 32768, 128)
+    n = get_config("llama3.2-1b").param_counts()["active"]
+    assert t == 6.0 * n * 4096 * 256
+    assert d == 2.0 * n * 128
+
+
+def test_cells_enumeration():
+    cells = all_cells()
+    assert len(cells) == 33  # 10 archs x 3 + 3 long_500k
+    assert ("jamba-v0.1-52b", SHAPES["long_500k"]) in cells
+    assert ("gemma2-9b", SHAPES["long_500k"]) not in cells
+
+
+def test_roofline_dataclass_brackets():
+    r = Roofline(arch="a", shape="s", mesh="single", chips=256,
+                 compute_s=1.0, memory_s=4.0, memory_lb_s=0.5,
+                 collective_s=2.0, model_flops=256 * 197e12,
+                 hlo_flops_adj=1.0, useful_ratio=0.5, fits_hbm=True,
+                 arg_gib=1.0, temp_gib=1.0)
+    assert r.dominant == "memory" and r.dominant_opt == "collective"
+    assert r.roofline_fraction == pytest.approx(0.25)
+    assert r.roofline_fraction_opt == pytest.approx(0.5)

@@ -1,0 +1,37 @@
+"""CLI launcher smokes: train/serve entry points run end-to-end (subprocess,
+CPU smoke configs) — deliverable (b)/(e) wiring."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run([sys.executable, "-m"] + args, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_cli_smoke(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "llama3.2-1b", "--smoke",
+                "--steps", "6", "--global-batch", "4", "--seq", "32",
+                "--ckpt", str(tmp_path)])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "final:" in out.stdout
+    assert any(d.startswith("step_") for d in os.listdir(tmp_path))
+
+
+def test_serve_cli_smoke():
+    out = _run(["repro.launch.serve", "--arch", "llama3.2-1b", "--batch",
+                "2", "--prompt-len", "8", "--new-tokens", "4"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.count("req") >= 2
+
+
+def test_dryrun_cli_help():
+    out = _run(["repro.launch.dryrun", "--help"])
+    assert out.returncode == 0
+    assert "--arch" in out.stdout and "--mesh" in out.stdout

@@ -1,0 +1,116 @@
+"""Layer-level gates: flash==dense attention (causal, SWA, softcap, GQA),
+RoPE shift property, decode ring-buffer semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ModelConfig, RunConfig
+from repro.launch.sharding import NO_AXES
+from repro.models import init_tree
+from repro.models.layers import (apply_rope, attention, attention_decode,
+                                 attention_dense, attention_flash, attn_specs,
+                                 softcap)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
+
+
+def _qkv(cfg, s=64, b=2, key=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(key), 3)
+    kv, g, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    q = jax.random.normal(k1, (b, s, kv, g, hd), jnp.float32)
+    k = jax.random.normal(k2, (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(k3, (b, s, kv, hd), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [0, 16, 40])
+@pytest.mark.parametrize("block", [8, 16, 32])
+def test_flash_equals_dense(window, block):
+    cfg = CFG
+    q, k, v = _qkv(cfg)
+    pos = jnp.arange(64)
+    o_d = attention_dense(cfg, q, k, v, pos, pos, window)
+    o_f = attention_flash(cfg, q, k, v, pos, pos, window, block, block)
+    # dense: (B,KV,G,S,T)->output (b,s,kv,g,h); flash returns (b,s,kv,g,h)
+    np.testing.assert_allclose(
+        np.asarray(jnp.einsum("bkgsh->bskgh", o_d)
+                   if o_d.ndim == 5 and o_d.shape[1] == cfg.n_kv_heads
+                   else o_d),
+        np.asarray(o_f), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_equals_dense_with_softcap():
+    cfg = dataclasses.replace(CFG, attn_softcap=30.0)
+    q, k, v = _qkv(cfg, s=32)
+    pos = jnp.arange(32)
+    o_d = attention_dense(cfg, q, k, v, pos, pos, 0)
+    o_f = attention_flash(cfg, q, k, v, pos, pos, 0, 8, 8)
+    np.testing.assert_allclose(np.asarray(jnp.einsum("bkgsh->bskgh", o_d)
+                                          if o_d.shape[1] == cfg.n_kv_heads
+                                          else o_d),
+                               np.asarray(o_f), rtol=2e-5, atol=2e-5)
+
+
+def test_rope_relative_shift_property():
+    """<rope(q,p1), rope(k,p2)> depends only on p1-p2."""
+    hd = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    def dot(p1, p2):
+        qr = apply_rope(q, jnp.array([p1]), 10000.0)
+        kr = apply_rope(k, jnp.array([p2]), 10000.0)
+        return float(jnp.sum(qr * kr))
+    assert dot(5, 3) == pytest.approx(dot(105, 103), rel=1e-4)
+    assert dot(5, 3) != pytest.approx(dot(5, 4), rel=1e-3)
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = softcap(x, 50.0)
+    assert float(jnp.max(jnp.abs(y))) <= 50.0
+    np.testing.assert_allclose(np.asarray(softcap(x, 0.0)), np.asarray(x))
+
+
+def test_attention_module_flash_vs_dense_end_to_end():
+    cfg = CFG
+    p = init_tree(attn_specs(cfg), jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model))
+    rc_d = RunConfig(attn_impl="dense", compute_dtype="float32")
+    rc_f = RunConfig(attn_impl="flash", flash_block=16,
+                     compute_dtype="float32")
+    o_d = attention(cfg, rc_d, p, x, NO_AXES)
+    o_f = attention(cfg, rc_f, p, x, NO_AXES)
+    np.testing.assert_allclose(np.asarray(o_d), np.asarray(o_f), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_decode_ring_buffer_swa():
+    """SWA ring cache: decoding past the window only attends to the last
+    `window` positions — equals dense attention on the suffix."""
+    cfg = dataclasses.replace(CFG, sliding_window=8)
+    p = init_tree(attn_specs(cfg), jax.random.PRNGKey(4))
+    b, t = 1, 8
+    # fill ring with positions 0..7 (roped keys), then decode pos 8..11
+    from repro.models.layers import _qkv as qkv_full
+    xs = jax.random.normal(jax.random.PRNGKey(5), (b, 12, cfg.d_model),
+                           jnp.float32) * 0.3
+    # reference: full attention over the window for position 11
+    rc = RunConfig(attn_impl="dense", compute_dtype="float32")
+    full = attention(cfg, rc, p, xs, NO_AXES, window=8)
+    # incremental: prefill 8, then 4 decode steps with the ring
+    _, (k8, v8) = attention(cfg, rc, p, xs[:, :8], NO_AXES, window=8,
+                            return_kv=True)
+    cache = {"k": k8, "v": v8}
+    outs = []
+    for pos in range(8, 12):
+        o, cache = attention_decode(cfg, p, xs[:, pos:pos + 1], cache,
+                                    jnp.asarray(pos), NO_AXES, window=8)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, 8:12]),
+                               rtol=2e-4, atol=2e-4)

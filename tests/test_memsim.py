@@ -1,0 +1,101 @@
+"""Memory simulator: multi-port determinism, banked conflicts, Table I cost."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost as costmod
+from repro.core.memsim import (LANES, Memory, banked, instruction_cycles,
+                               multiport, op_conflict_cycles)
+
+
+def test_multiport_read_write_determinism():
+    addrs = jnp.arange(64, dtype=jnp.int32).reshape(4, 16)
+    m41 = multiport(4, 1)
+    np.testing.assert_array_equal(op_conflict_cycles(m41, addrs), [4, 4, 4, 4])
+    np.testing.assert_array_equal(
+        op_conflict_cycles(m41, addrs, is_write=True), [16, 16, 16, 16])
+    m42 = multiport(4, 2)
+    np.testing.assert_array_equal(
+        op_conflict_cycles(m42, addrs, is_write=True), [8, 8, 8, 8])
+    assert m42.fmax_mhz == 600.0 and m41.fmax_mhz == 771.0
+
+
+def test_vb_write_is_4bank_arbitrated():
+    vb = multiport(4, 1, vb=True)
+    seq = jnp.arange(16, dtype=jnp.int32)[None, :]        # unit stride
+    np.testing.assert_array_equal(
+        op_conflict_cycles(vb, seq, is_write=True), [4])  # 16 lanes / 4 banks
+    same = jnp.zeros((1, 16), jnp.int32)                  # all to one bank
+    np.testing.assert_array_equal(
+        op_conflict_cycles(vb, same, is_write=True), [16])
+    # reads stay 4R deterministic
+    np.testing.assert_array_equal(op_conflict_cycles(vb, same), [4])
+
+
+def test_banked_conflict_extremes():
+    b16 = banked(16)
+    unit = jnp.arange(16, dtype=jnp.int32)[None, :]
+    np.testing.assert_array_equal(op_conflict_cycles(b16, unit), [1])
+    stride16 = (jnp.arange(16, dtype=jnp.int32) * 16)[None, :]
+    np.testing.assert_array_equal(op_conflict_cycles(b16, stride16), [16])
+    # same *address* also serializes (no broadcast — paper TW efficiency 1/16)
+    same = jnp.full((1, 16), 42, jnp.int32)
+    np.testing.assert_array_equal(op_conflict_cycles(b16, same), [16])
+
+
+def test_offset_map_fixes_complex_stride():
+    """16 lanes loading I-words of consecutive complex elements."""
+    i_words = (2 * jnp.arange(16, dtype=jnp.int32))[None, :]
+    assert int(op_conflict_cycles(banked(16, "lsb"), i_words)[0]) == 2
+    assert int(op_conflict_cycles(banked(16, "offset"), i_words)[0]) == 1
+
+
+def test_instruction_overheads_calibrated():
+    """Store of 64 fully-conflicted ops reproduces Table II's 1054."""
+    addrs = jnp.zeros((64, 16), jnp.int32) + 16 * jnp.arange(16, dtype=jnp.int32)
+    assert instruction_cycles(banked(16), addrs, is_write=True) == 64 * 16 + 30
+    assert instruction_cycles(banked(8), addrs, is_write=True) == 64 * 16 + 24
+    assert instruction_cycles(banked(4), addrs, is_write=True) == 64 * 16 + 22
+
+
+def test_functional_memory_roundtrip():
+    mem = Memory.zeros(128)
+    addrs = jnp.arange(0, 32, 2, dtype=jnp.int32)
+    vals = jnp.arange(16, dtype=jnp.float32) + 1
+    mem = mem.write(addrs, vals)
+    np.testing.assert_allclose(np.asarray(mem.read(addrs)), np.asarray(vals))
+    np.testing.assert_allclose(np.asarray(mem.read(addrs + 1)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Table I / Fig 9 cost model
+# ---------------------------------------------------------------------------
+
+def test_table1_shared_mem_alms():
+    assert costmod.memory_resources(banked(16)).alms == (
+        789 + 1507 + 13105 + 16 * 138 + 16 * 438 + 16 * 173)
+    assert costmod.memory_resources(multiport(4, 1)).alms == 831
+
+
+def test_banked_footprint_constant_in_capacity():
+    b16 = banked(16)
+    assert costmod.footprint_alms(b16, 64) == costmod.footprint_alms(b16, 448)
+    assert costmod.footprint_alms(b16, 448) == costmod.SECTOR_ALMS
+    assert costmod.footprint_alms(banked(8), 224) == costmod.SECTOR_ALMS / 2
+    assert costmod.footprint_alms(banked(4), 112) == costmod.SECTOR_ALMS / 4
+
+
+def test_multiport_capacity_rooflines():
+    """Paper §VI: 4R-1W caps at 112 KB, 4R-2W at 224 KB."""
+    assert costmod.max_capacity_kb(multiport(4, 1)) == pytest.approx(112.0)
+    assert costmod.max_capacity_kb(multiport(4, 2)) == pytest.approx(224.0)
+    with pytest.raises(ValueError):
+        costmod.footprint_alms(multiport(4, 1), 128.0)
+
+
+def test_multiport_footprint_grows_to_sector():
+    """At its 112 KB cap, 4R-1W occupies ~a full sector (paper Fig 8)."""
+    small = costmod.footprint_alms(multiport(4, 1), 16.0)
+    big = costmod.footprint_alms(multiport(4, 1), 112.0)
+    assert small < 0.2 * costmod.SECTOR_ALMS
+    assert big > 1.0 * costmod.SECTOR_ALMS  # M20K span + pipelining

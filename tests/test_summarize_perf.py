@@ -1,0 +1,49 @@
+"""Smoke coverage for the reporting/driver layers (summarize, perf suites)."""
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                   "artifacts")
+
+
+def test_summarize_renders():
+    from repro.launch.summarize import dryrun_table, perf_table
+    dd = os.path.join(ART, "dryrun")
+    if not os.path.isdir(dd):
+        pytest.skip("no dry-run artifacts")
+    md = dryrun_table(dd)
+    assert md.count("\n") >= 10
+    assert "| arch |" in md
+    pt = perf_table(os.path.join(ART, "perf"))
+    assert isinstance(pt, str)
+
+
+def test_perf_suites_well_formed():
+    from repro.launch.perf import SUITES
+    for name, suite in SUITES.items():
+        assert "baseline" in suite or "legacy_shard" in suite, name
+        for vname, overrides in suite.items():
+            assert isinstance(overrides, dict)
+            # overrides must be valid RunConfig fields
+            from repro.configs.base import RunConfig
+            import dataclasses
+            fields = {f.name for f in dataclasses.fields(RunConfig)}
+            assert set(overrides) <= fields, (name, vname)
+
+
+def test_artifacts_have_block_adjustment():
+    dd = os.path.join(ART, "dryrun")
+    if not os.path.isdir(dd):
+        pytest.skip("no dry-run artifacts")
+    f = os.path.join(dd, "qwen1.5-110b__train_4k__single.json")
+    if not os.path.exists(f):
+        pytest.skip("qwen artifact missing")
+    with open(f) as fh:
+        d = json.load(fh)
+    assert d["full"]["flops"] > 0 and d["block"]["flops"] > 0
+    assert d["n_superblocks"] == 80
+    # adjusted flops must exceed the raw full-module number (scan counted once)
+    from repro.launch.roofline import adjusted
+    assert adjusted(d, "flops") > 2 * d["full"]["flops"]
