@@ -7,18 +7,17 @@ The conflict simulator works for any power-of-two bank count; area beyond
 (16-bank = 1 sector, each doubling ≈ doubles arbitration logic — the paper's
 own "logic area varies linearly with the number of banks").
 
+Driven by the declarative sweep runner over parsed architecture names
+("32B-xor" etc. resolve through repro.core.arch.get).
+
 CSV: name,us_per_call,derived.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.cost import SECTOR_ALMS
-from repro.core.memsim import banked
-from repro.isa.programs.fft import fft_program
-from repro.isa.vm import run_program
+from repro.bench import fft_workload, sweep
 
 BANKS = (4, 8, 16, 32, 64)
+MAPPINGS = ("offset", "xor")
 
 
 def _area_sectors(n_banks: int) -> float:
@@ -28,26 +27,20 @@ def _area_sectors(n_banks: int) -> float:
 
 
 def rows():
+    archs = [f"{nb}B-{mapping}" for nb in BANKS for mapping in MAPPINGS]
     out = []
-    prog = fft_program(4096, 16)
-    mem0 = np.zeros(16384, np.float32)
-    base_time = None
-    for nb in BANKS:
-        for mapping in ("offset", "xor"):
-            spec = banked(nb, mapping)
-            c = run_program(prog, spec, mem0, execute=False).cost
-            t = c.time_us(spec.fmax_mhz)
-            if base_time is None:
-                base_time = t
-            area = _area_sectors(nb)
-            out.append({
-                "name": f"bankscale_fft_r16_{nb}B_{mapping}",
-                "us_per_call": round(t, 2),
-                "total_cycles": c.total_cycles,
-                "area_sectors": area,
-                "perf_per_area": round(1.0 / (t * area), 4),
-                "d_bank_eff_pct": round(c.read_bank_eff(), 1),
-            })
+    for rec in sweep(archs, fft_workload(4096, 16)):
+        nb = int(rec["arch"].split("B-")[0])
+        t = rec["time_us"]
+        area = _area_sectors(nb)
+        out.append({
+            "name": f"bankscale_fft_r16_{rec['arch'].replace('-', '_')}",
+            "us_per_call": round(t, 2),
+            "total_cycles": rec["total_cycles"],
+            "area_sectors": area,
+            "perf_per_area": round(1.0 / (t * area), 4),
+            "d_bank_eff_pct": round(rec["r_bank_eff"], 1),
+        })
     return out
 
 

@@ -11,58 +11,44 @@ benchmarks (the §Perf-style hillclimb of the FPGA design itself):
     comparator per lane pair on the arbiter input (the grant word is reused
     as the writeback mux control for all matching lanes).
 
+Driven by the declarative sweep runner; variants resolve by name through
+repro.core.arch.get ("16B-xor-bcast" etc.).
+
 CSV: name,us_per_call,derived.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.paper_data import TABLE3
-from repro.core.memsim import banked
-from repro.isa.programs.fft import fft_program
-from repro.isa.programs.transpose import transpose_program
-from repro.isa.vm import run_program
+from repro.bench import fft_workload, sweep, transpose_workload
 
-VARIANTS = (
-    banked(16, "offset"),
-    banked(16, "offset", broadcast=True),
-    banked(16, "xor"),
-    banked(16, "xor", broadcast=True),
-)
+VARIANTS = ("16B-offset", "16B-offset-bcast", "16B-xor", "16B-xor-bcast")
+
+#: best cycle count anywhere in each Table III radix row (incl. multi-port)
+PAPER_BEST = {4: 53267, 8: 44300, 16: 37214}
 
 
 def rows():
     out = []
-    mem0 = np.zeros(16384, np.float32)
-    paper_best = {4: 53267, 8: 44300, 16: 37214}   # best cycle count/table
-    for radix in (4, 8, 16):
-        prog = fft_program(4096, radix)
-        for spec in VARIANTS:
-            c = run_program(prog, spec, mem0, execute=False).cost
-            base = TABLE3[radix]["16B-offset"][3]
-            out.append({
-                "name": f"beyond_fft r{radix}_{spec.name}",
-                "us_per_call": round(c.time_us(spec.fmax_mhz), 2),
-                "total": c.total_cycles,
-                "vs_paper_16B_offset_pct":
-                    round(100 * (c.total_cycles - base) / base, 1),
-                "vs_paper_best_any_pct":
-                    round(100 * (c.total_cycles - paper_best[radix])
-                          / paper_best[radix], 1),
-                "fp_efficiency_pct":
-                    round(100 * c.fp_ops / c.total_cycles, 1),
-            })
-    for n in (32, 128):
-        prog = transpose_program(n)
-        mem0t = np.zeros(2 * n * n, np.float32)
-        for spec in VARIANTS:
-            c = run_program(prog, spec, mem0t, execute=False).cost
-            out.append({
-                "name": f"beyond_transpose{n}_{spec.name}",
-                "us_per_call": round(c.time_us(spec.fmax_mhz), 2),
-                "total": c.total_cycles,
-                "load": c.load_cycles, "store": c.store_cycles,
-            })
+    for rec in sweep(VARIANTS, [fft_workload(4096, r) for r in (4, 8, 16)]):
+        radix, total = rec["radix"], rec["total_cycles"]
+        base = TABLE3[radix]["16B-offset"][3]
+        out.append({
+            "name": f"beyond_fft r{radix}_{rec['arch']}",
+            "us_per_call": round(rec["time_us"], 2),
+            "total": total,
+            "vs_paper_16B_offset_pct": round(100 * (total - base) / base, 1),
+            "vs_paper_best_any_pct":
+                round(100 * (total - PAPER_BEST[radix]) / PAPER_BEST[radix],
+                      1),
+            "fp_efficiency_pct": round(100 * rec["fp_ops"] / total, 1),
+        })
+    for rec in sweep(VARIANTS, [transpose_workload(n) for n in (32, 128)]):
+        out.append({
+            "name": f"beyond_transpose{rec['n']}_{rec['arch']}",
+            "us_per_call": round(rec["time_us"], 2),
+            "total": rec["total_cycles"],
+            "load": rec["load_cycles"], "store": rec["store_cycles"],
+        })
     return out
 
 

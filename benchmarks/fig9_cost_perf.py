@@ -1,45 +1,37 @@
 """Fig 9 reproduction: cost (true footprint) vs performance (radix-16
-4096-pt FFT) across memory sizes — the banked-vs-multiport crossover.
+4096-pt FFT) across memory sizes — the banked-vs-multiport crossover,
+driven by the declarative sweep runner.
 CSV: name,us_per_call,derived."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import cost as C
-from repro.core.memsim import banked, multiport
-from repro.isa.programs.fft import fft_program
-from repro.isa.vm import run_program
+from repro.bench import fft_workload, sweep
+from repro.core import arch
 
 SIZES_KB = (64, 112, 168, 224)
-MEMS = [multiport(4, 1), multiport(4, 2), banked(16, "offset"), banked(16),
-        banked(8, "offset"), banked(4, "offset")]
+ARCH_NAMES = ("4R-1W", "4R-2W", "16B-offset", "16B", "8B-offset", "4B-offset")
 
 
 def rows():
-    prog = fft_program(4096, 16)
-    mem0 = np.zeros(16384, np.float32)
-    perf = {}
-    for spec in MEMS:
-        c = run_program(prog, spec, mem0, execute=False).cost
-        perf[spec.name] = c.time_us(spec.fmax_mhz)
+    perf = {rec["arch"]: rec["time_us"]
+            for rec in sweep(ARCH_NAMES, fft_workload(4096, 16))}
     slowest = max(perf.values())
     out = []
     for size in SIZES_KB:
-        for spec in MEMS:
+        for name in ARCH_NAMES:
+            a = arch.get(name)
             try:
-                area = C.processor_footprint_alms(spec, float(size))
+                area = a.processor_footprint_alms(float(size))
             except ValueError:
-                out.append({"name": f"fig9_{size}KB_{spec.name}",
-                            "us_per_call": perf[spec.name],
+                out.append({"name": f"fig9_{size}KB_{name}",
+                            "us_per_call": perf[name],
                             "footprint_alms": "over-capacity",
-                            "norm_perf": round(perf[spec.name] / slowest, 3)})
+                            "norm_perf": round(perf[name] / slowest, 3)})
                 continue
-            out.append({"name": f"fig9_{size}KB_{spec.name}",
-                        "us_per_call": perf[spec.name],
+            out.append({"name": f"fig9_{size}KB_{name}",
+                        "us_per_call": perf[name],
                         "footprint_alms": round(area),
-                        "norm_perf": round(perf[spec.name] / slowest, 3),
-                        "perf_per_area": round(1e6 / (perf[spec.name] * area),
-                                               2)})
+                        "norm_perf": round(perf[name] / slowest, 3),
+                        "perf_per_area": round(1e6 / (perf[name] * area), 2)})
     return out
 
 

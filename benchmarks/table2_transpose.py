@@ -1,37 +1,35 @@
-"""Table II reproduction: matrix transpose over 8 memory architectures.
+"""Table II reproduction: matrix transpose over 8 memory architectures,
+driven by the declarative sweep runner (repro.bench).
 CSV: name,us_per_call,derived  (derived = sim cycles | paper cycles | Δ%)."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.paper_data import TABLE2
-from repro.core.memsim import TRANSPOSE_MEMORIES
-from repro.isa.programs.transpose import transpose_program
-from repro.isa.vm import run_program
+from repro.bench import sweep, transpose_workload
+from repro.core.arch import TRANSPOSE_ARCHITECTURES
+
+SIZES = (32, 64, 128)
 
 
 def rows():
+    recs = sweep(TRANSPOSE_ARCHITECTURES,
+                 [transpose_workload(n) for n in SIZES])
     out = []
-    for n in (32, 64, 128):
-        prog = transpose_program(n)
-        mem0 = np.zeros(2 * n * n, np.float32)
-        for spec in TRANSPOSE_MEMORIES:
-            c = run_program(prog, spec, mem0, execute=False).cost
-            t = c.time_us(spec.fmax_mhz)
-            ref = TABLE2[n].get(spec.name)
-            delta = 100 * (c.total_cycles - ref[2]) / ref[2] if ref else None
-            out.append({
-                "name": f"transpose{n}_{spec.name}",
-                "us_per_call": round(t, 3),
-                "load": c.load_cycles, "store": c.store_cycles,
-                "total": c.total_cycles,
-                "paper_total": ref[2] if ref else "",
-                "delta_pct": round(delta, 2) if delta is not None else "",
-                "r_bank_eff": round(c.read_bank_eff(), 1)
-                if spec.is_banked else "",
-                "w_bank_eff": round(c.write_bank_eff(), 1)
-                if spec.is_banked else "",
-            })
+    for rec in recs:
+        n, name = rec["n"], rec["arch"]
+        ref = TABLE2[n].get(name)
+        delta = (100 * (rec["total_cycles"] - ref[2]) / ref[2]
+                 if ref else None)
+        banked = rec["kind"] == "banked"
+        out.append({
+            "name": f"transpose{n}_{name}",
+            "us_per_call": round(rec["time_us"], 3),
+            "load": rec["load_cycles"], "store": rec["store_cycles"],
+            "total": rec["total_cycles"],
+            "paper_total": ref[2] if ref else "",
+            "delta_pct": round(delta, 2) if delta is not None else "",
+            "r_bank_eff": round(rec["r_bank_eff"], 1) if banked else "",
+            "w_bank_eff": round(rec["w_bank_eff"], 1) if banked else "",
+        })
     return out
 
 

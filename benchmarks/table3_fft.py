@@ -1,50 +1,37 @@
 """Table III reproduction: 4096-pt Cooley-Tukey FFT (radix 4/8/16) over all
-9 memory architectures, with functional verification vs numpy.
+9 memory architectures via the declarative sweep runner, with functional
+verification vs numpy.
 CSV: name,us_per_call,derived."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.paper_data import TABLE3
-from repro.core.memsim import PAPER_MEMORIES
-from repro.isa.programs.fft import (fft_program, make_fft_memory,
-                                    oracle_spectrum)
-from repro.isa.vm import run_program
+from repro.bench import fft_workload, sweep, verify_workload
+from repro.core.arch import PAPER_ARCHITECTURES
 
 
 def rows(verify: bool = True):
+    workloads = [fft_workload(4096, radix) for radix in (4, 8, 16)]
+    func_err = {w.meta["radix"]: (verify_workload(w, "16B") if verify
+                                  else None)
+                for w in workloads}
     out = []
-    for radix in (4, 8, 16):
-        n = 4096
-        prog = fft_program(n, radix)
-        rng = np.random.default_rng(0)
-        x = (rng.standard_normal(n) + 1j * rng.standard_normal(n)
-             ).astype(np.complex64)
-        mem0, _ = make_fft_memory(n, x)
-        func_err = None
-        if verify:
-            res = run_program(prog, PAPER_MEMORIES[3], mem0)
-            got = res.memory[0:2 * n:2] + 1j * res.memory[1:2 * n:2]
-            want = oracle_spectrum(x, radix)
-            func_err = float(np.max(np.abs(got - want))
-                             / np.max(np.abs(want)))
-        for spec in PAPER_MEMORIES:
-            c = run_program(prog, spec, mem0, execute=False).cost
-            ref = TABLE3[radix].get(spec.name)
-            delta = 100 * (c.total_cycles - ref[3]) / ref[3] if ref else None
-            fp_cycles = c.fp_ops
-            eff = 100.0 * fp_cycles / max(c.total_cycles, 1)
-            out.append({
-                "name": f"fft4096r{radix}_{spec.name}",
-                "us_per_call": round(c.time_us(spec.fmax_mhz), 2),
-                "D": c.load_cycles, "TW": c.tw_load_cycles,
-                "S": c.store_cycles, "total": c.total_cycles,
-                "paper_total": ref[3] if ref else "",
-                "delta_pct": round(delta, 2) if delta is not None else "",
-                "efficiency_pct": round(eff, 1),
-                "paper_eff": ref[5] if ref else "",
-                "func_rel_err": func_err,
-            })
+    for rec in sweep(PAPER_ARCHITECTURES, workloads):
+        radix, name = rec["radix"], rec["arch"]
+        ref = TABLE3[radix].get(name)
+        delta = (100 * (rec["total_cycles"] - ref[3]) / ref[3]
+                 if ref else None)
+        eff = 100.0 * rec["fp_ops"] / max(rec["total_cycles"], 1)
+        out.append({
+            "name": f"fft4096r{radix}_{name}",
+            "us_per_call": round(rec["time_us"], 2),
+            "D": rec["load_cycles"], "TW": rec["tw_load_cycles"],
+            "S": rec["store_cycles"], "total": rec["total_cycles"],
+            "paper_total": ref[3] if ref else "",
+            "delta_pct": round(delta, 2) if delta is not None else "",
+            "efficiency_pct": round(eff, 1),
+            "paper_eff": ref[5] if ref else "",
+            "func_rel_err": func_err[radix],
+        })
     return out
 
 

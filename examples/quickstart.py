@@ -1,49 +1,55 @@
-"""Quickstart: the paper in 60 seconds.
+"""Quickstart: the paper in 60 seconds, through the three-layer API.
 
-1. Builds a 16-bank shared memory and shows bank-conflict arbitration on the
-   paper's Fig-4 example.
-2. Runs the 32×32 transpose benchmark on two memory architectures and prints
-   the Table-II-style cycle breakdown.
-3. Uses the same arbitration math as an MoE token dispatch (the TPU-side
-   adaptation).
+1. Layer 1 — ``repro.core.arch``: pick memory architectures by name and show
+   bank-conflict arbitration on the paper's Fig-4 example.
+2. Layer 3 — ``repro.bench``: sweep the 32×32 transpose benchmark across
+   architectures and print the Table-II-style cycle breakdown.
+3. Layer 2 — ``repro.kernels``: dispatch the banked-gather TPU kernel and
+   the MoE-dispatch arbiter math under an architecture, uniformly.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (arbitrate_schedule, bank_counts, banked,
-                        banked_dispatch, multiport, serialization_factor)
-from repro.isa.programs.transpose import transpose_program
-from repro.isa.vm import run_program
+from repro import kernels
+from repro.bench import sweep, transpose_workload
+from repro.core import arch
+from repro.core import (arbitrate_schedule, bank_counts, banked_dispatch,
+                        serialization_factor)
 
 print("=" * 64)
-print("1) Carry-chain arbitration (paper Fig. 4/6, 8 lanes, 8 banks)")
+print("1) Architectures by name + carry-chain arbitration (paper Fig. 4/6)")
+mem = arch.get("8B")        # any of the paper's 9 names, or e.g. "32B-xor"
 banks = jnp.array([0, 1, 1, 3, 1, 4, 3, 6], jnp.int32)
-schedule, cycles = arbitrate_schedule(banks, 8)
-print(f"   lane->bank {banks.tolist()}  per-bank load "
-      f"{bank_counts(banks, 8).tolist()}")
+schedule, cycles = arbitrate_schedule(banks, mem.n_banks)
+print(f"   {mem!r}  lane->bank {banks.tolist()}  per-bank load "
+      f"{bank_counts(banks, mem.n_banks).tolist()}")
 print(f"   max conflicts = {int(cycles)} cycles (bank 1: lanes 1,2,4)")
 for c in range(int(cycles)):
     served = [(b, int(np.argmax(np.asarray(schedule[c, b]))))
-              for b in range(8) if schedule[c, b].sum() > 0]
+              for b in range(mem.n_banks) if schedule[c, b].sum() > 0]
     print(f"   cycle {c}: bank<-lane grants {served}")
 
 print("=" * 64)
-print("2) 32x32 transpose, banked (16B, offset) vs multi-port (4R-2W)")
-prog = transpose_program(32)
-mem0 = np.zeros(2048, np.float32)
-for spec in (banked(16, "offset"), banked(16), multiport(4, 2)):
-    r = run_program(prog, spec, mem0, execute=False)
-    c = r.cost
-    print(f"   {spec.name:12s} load={c.load_cycles:5d} store={c.store_cycles:5d} "
-          f"total={c.total_cycles:5d}  time={r.time_us:5.2f}us "
-          f"@ {spec.fmax_mhz:.0f} MHz")
+print("2) 32x32 transpose sweep: banked (16B, offset/lsb) vs 4R-2W")
+for r in sweep(["16B-offset", "16B", "4R-2W"], transpose_workload(32)):
+    print(f"   {r['arch']:12s} load={r['load_cycles']:5d} "
+          f"store={r['store_cycles']:5d} total={r['total_cycles']:5d}  "
+          f"time={r['time_us']:5.2f}us @ {r['fmax_mhz']:.0f} MHz")
 
 print("=" * 64)
-print("3) The same arbiter as MoE dispatch (experts = banks)")
+print("3) Kernels dispatch uniformly under any architecture")
+table = jnp.arange(64 * 512, dtype=jnp.float32).reshape(64, 512)
+idx = jnp.array([3, 60, 7, 7], jnp.int32)
+gather = kernels.get("banked_gather")
+rows = gather.run(arch.get("16B-offset"), table, idx)
+print(f"   banked_gather({idx.tolist()}) -> rows {rows[:, 0].tolist()}  "
+      f"(cost {gather.cost_cycles(arch.get('16B-offset'), table, idx)} cyc)")
+
 expert_of_token = jnp.array([3, 1, 3, 3, 0, 1, 3, 2], jnp.int32)
 plan = banked_dispatch(expert_of_token, n_banks=4, capacity=2)
+print(f"   the same arbiter as MoE dispatch (experts = banks):")
 print(f"   expert ids    : {plan.bank.tolist()}")
 print(f"   grant position: {plan.position.tolist()}")
 print(f"   kept (cap=2)  : {plan.kept.tolist()}  "

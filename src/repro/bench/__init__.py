@@ -1,0 +1,12 @@
+"""Declarative benchmark layer — layer 3 of the three-layer public API.
+
+``sweep(archs, workloads)`` costs every (architecture × workload) cell and
+returns tidy records; the paper-table scripts under ``benchmarks/`` are thin
+formatters over it.  See runner.py for the API and workloads.py for the
+paper's transpose/FFT workload builders.
+"""
+from repro.bench.runner import Workload, run_cell, sweep, verify_workload
+from repro.bench.workloads import fft_workload, transpose_workload
+
+__all__ = ["Workload", "run_cell", "sweep", "verify_workload",
+           "fft_workload", "transpose_workload"]

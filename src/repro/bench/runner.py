@@ -1,0 +1,94 @@
+"""Declarative sweep runner: (architectures × workloads) -> tidy records.
+
+One ``Workload`` wraps an ISA program plus its initial memory image and an
+optional functional oracle.  ``sweep`` costs every cell of the comparison
+surface (the paper is 9 architectures × 51 benchmarks) and returns one flat
+dict per cell — ready for CSV printing, pandas, or the paper-table
+formatters in ``benchmarks/``.
+
+    from repro.bench import sweep, transpose_workload
+    recs = sweep(["16B-offset", "4R-2W"], [transpose_workload(32)])
+    recs[0]["total_cycles"], recs[0]["time_us"]
+
+Architectures may be given as ``MemoryArchitecture`` objects, ``MemSpec``
+values, or registry names ("16B-offset", "32B-xor", ...).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from repro.core import arch as _arch
+from repro.core.arch import MemoryArchitecture
+from repro.isa.assembler import Program
+
+
+@dataclass(frozen=True)
+class Workload:
+    """One benchmark program: functional state + optional oracle.
+
+    ``oracle(final_memory) -> float`` returns a relative error; it certifies
+    the address traces being costed are the ones a correct program emits.
+    ``meta`` is merged into every record of the workload's sweep cells.
+    """
+    name: str
+    program: Program
+    init_memory: np.ndarray | None = None
+    oracle: Callable[[np.ndarray], float] | None = None
+    meta: dict = field(default_factory=dict)
+
+
+def _nan_to_blank(x: float) -> float | str:
+    return "" if math.isnan(x) else x
+
+
+def run_cell(arch, workload: Workload, execute: bool = False) -> dict:
+    """Cost one (architecture, workload) cell; returns a tidy record."""
+    a = _arch.resolve(arch)
+    res = a.run_program(workload.program, workload.init_memory,
+                        execute=execute)
+    c = res.cost
+    rec = {
+        "workload": workload.name,
+        "arch": a.name,
+        "kind": a.spec.kind,
+        "fmax_mhz": a.fmax_mhz,
+        "load_cycles": c.load_cycles,
+        "store_cycles": c.store_cycles,
+        "tw_load_cycles": c.tw_load_cycles,
+        "compute_cycles": c.compute_cycles,
+        "total_cycles": c.total_cycles,
+        "time_us": c.time_us(a.fmax_mhz),
+        "fp_ops": c.fp_ops,
+        "r_bank_eff": _nan_to_blank(c.read_bank_eff()),
+        "w_bank_eff": _nan_to_blank(c.write_bank_eff()),
+        "tw_bank_eff": _nan_to_blank(c.tw_bank_eff()),
+    }
+    rec.update(workload.meta)
+    return rec
+
+
+def sweep(archs: Iterable, workloads: Sequence[Workload] | Workload,
+          execute: bool = False) -> list[dict]:
+    """Cost every (workload × architecture) cell, workload-major (the order
+    the paper's tables print in)."""
+    if isinstance(workloads, Workload):
+        workloads = [workloads]
+    archs = [_arch.resolve(a) for a in archs]
+    return [run_cell(a, w, execute=execute)
+            for w in workloads for a in archs]
+
+
+def verify_workload(workload: Workload,
+                    arch: MemoryArchitecture | str = "16B") -> float:
+    """Functionally execute the workload on one architecture and apply its
+    oracle; returns the relative error (data movement is architecture-
+    independent, so one execution certifies the whole sweep row)."""
+    if workload.oracle is None:
+        raise ValueError(f"workload {workload.name!r} has no oracle")
+    a = _arch.resolve(arch)
+    res = a.run_program(workload.program, workload.init_memory, execute=True)
+    return float(workload.oracle(res.memory))

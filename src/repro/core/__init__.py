@@ -17,7 +17,10 @@ from repro.core.memsim import (LANES, PAPER_MEMORIES, TRANSPOSE_MEMORIES,
                                MemSpec, Memory, TraceCost, banked, cost_trace,
                                instruction_cycles, multiport,
                                op_conflict_cycles)
-from repro.core import cost
+from repro.core import arch, cost
+from repro.core.arch import (PAPER_ARCHITECTURES, TRANSPOSE_ARCHITECTURES,
+                             BankedLayout, BankedMemory, MemoryArchitecture,
+                             MultiPortMemory)
 
 __all__ = [
     "BANK_MAPS", "bank_of", "get_bank_map",
@@ -30,4 +33,6 @@ __all__ = [
     "LANES", "PAPER_MEMORIES", "TRANSPOSE_MEMORIES", "MemSpec", "Memory",
     "TraceCost", "banked", "cost_trace", "instruction_cycles", "multiport",
     "op_conflict_cycles", "cost",
+    "arch", "MemoryArchitecture", "BankedMemory", "MultiPortMemory",
+    "BankedLayout", "PAPER_ARCHITECTURES", "TRANSPOSE_ARCHITECTURES",
 ]

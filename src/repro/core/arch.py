@@ -1,0 +1,408 @@
+"""Unified memory-architecture API (the paper's comparison surface as objects).
+
+Layer 1 of the three-layer public API (see README.md):
+
+  * ``MemoryArchitecture`` — abstract base owning one shared-memory variant's
+    conflict/cycle model, fmax, trace costing, and (for banked memories) the
+    single source-of-truth ``BankedLayout`` for logical↔physical row math.
+  * ``BankedMemory`` / ``MultiPortMemory`` — the two families of paper §I/§III,
+    wrapping the frozen ``MemSpec`` descriptor that the low-level simulator
+    and the area model key on.
+  * a string-keyed registry: ``get("16B-offset")`` resolves any of the nine
+    paper architectures (and parses unregistered-but-constructible names like
+    ``"32B-xor"`` or ``"8R-1W"``); ``register(...)`` adds new variants.
+
+The legacy free functions (``repro.core.memsim.op_conflict_cycles``,
+``instruction_cycles``, ``cost_trace``) are kept as shims that delegate here,
+so pre-redesign call sites keep working unchanged.
+"""
+from __future__ import annotations
+
+import functools
+import re
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core import controllers as ctl
+from repro.core.bankmap import BANK_MAPS, bank_of
+from repro.core.conflicts import max_conflicts, max_conflicts_broadcast
+from repro.core.memsim import (LANES, MemSpec, TraceCost, banked as _banked_spec,
+                               multiport as _multiport_spec)
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+# BankedLayout — the one true logical↔physical row mapping
+# --------------------------------------------------------------------------
+
+def _log2(n: int) -> int:
+    if n <= 0 or n & (n - 1):
+        raise ValueError(f"bank count must be a power of two, got {n}")
+    return n.bit_length() - 1
+
+
+def bank_slot_of(r, n_banks: int, mapping: str = "lsb", shift: int = 1):
+    """Logical row ``r`` (scalar or array, trace-safe) -> (bank, slot).
+
+    The pair is a bijection of ``r`` for every supported map: the bank is the
+    mapped bits, the slot is the remaining bits re-packed densely.  For the
+    offset map the bank bits live at ``[shift+log2B-1 : shift]``, so the slot
+    keeps the ``shift`` low bits in place (I/Q pairs stay adjacent).
+    """
+    log2b = _log2(n_banks)
+    kw = {"shift": shift} if mapping == "offset" else {}
+    bank = bank_of(r, n_banks, mapping, **kw)
+    if mapping == "offset":
+        low = r & ((1 << shift) - 1)
+        slot = ((r >> (log2b + shift)) << shift) | low
+    else:
+        slot = r >> log2b
+    return bank, slot
+
+
+def physical_row_of(r, n_banks: int, rows_per_bank: int,
+                    mapping: str = "lsb", shift: int = 1):
+    """Logical row -> bank-major physical row.  Usable inside Pallas index
+    maps (pure integer ops on traced scalars)."""
+    bank, slot = bank_slot_of(r, n_banks, mapping, shift)
+    return bank * rows_per_bank + slot
+
+
+@dataclass(frozen=True)
+class BankedLayout:
+    """Bank-major storage layout: logical row r lives at physical row
+    ``bank(r)·rows_per_bank + slot(r)``.
+
+    This was previously duplicated between ``kernels/banked_gather/ops.py``
+    and each kernel's ``kernel.py``; both now delegate here.
+    """
+    n_banks: int
+    mapping: str = "lsb"
+    shift: int = 1            # offset-map bank-bit position (paper: 1)
+
+    def __post_init__(self):
+        _log2(self.n_banks)
+        if self.mapping not in BANK_MAPS:
+            raise ValueError(
+                f"unknown bank map {self.mapping!r}; choose from {BANK_MAPS}")
+
+    def bank_slot(self, r):
+        return bank_slot_of(r, self.n_banks, self.mapping, self.shift)
+
+    def physical_row(self, r, n_rows: int):
+        return physical_row_of(r, self.n_banks, n_rows // self.n_banks,
+                               self.mapping, self.shift)
+
+    def physical_rows(self, n_rows: int) -> Array:
+        """All logical rows' physical positions: a permutation of arange."""
+        if n_rows % self.n_banks:
+            raise ValueError(f"n_rows={n_rows} not divisible by "
+                             f"{self.n_banks} banks")
+        r = jnp.arange(n_rows, dtype=jnp.int32)
+        return self.physical_row(r, n_rows)
+
+    def to_banked(self, table: Array) -> Array:
+        """Relayout logical-row-major -> bank-major (host-side scatter)."""
+        phys = self.physical_rows(table.shape[0])
+        return jnp.zeros_like(table).at[phys].set(table)
+
+    def from_banked(self, table_banked: Array) -> Array:
+        """Inverse relayout bank-major -> logical-row-major."""
+        phys = self.physical_rows(table_banked.shape[0])
+        return table_banked[phys]
+
+
+# --------------------------------------------------------------------------
+# MemoryArchitecture hierarchy
+# --------------------------------------------------------------------------
+
+class MemoryArchitecture:
+    """One shared-memory variant: conflict/cycle model + fmax + costing.
+
+    Subclasses implement ``op_cycles``; everything else (instruction
+    overheads, trace costing, program runs, area hooks) is shared.
+    """
+
+    def __init__(self, spec: MemSpec):
+        self.spec = spec
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def fmax_mhz(self) -> float:
+        return self.spec.fmax_mhz
+
+    @property
+    def is_banked(self) -> bool:
+        return self.spec.is_banked
+
+    @property
+    def layout(self) -> BankedLayout | None:
+        """Bank-major storage layout; None for layout-free memories."""
+        return None
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.name!r})"
+
+    # -- timing model ------------------------------------------------------
+
+    def op_cycles(self, addrs: Array, mask: Array | None = None,
+                  is_write: bool = False) -> Array:
+        """(ops, LANES) addresses -> (ops,) cycles each op occupies memory."""
+        raise NotImplementedError
+
+    def _instruction_overhead(self, is_write: bool) -> int:
+        return 0
+
+    def instruction_cycles(self, addrs: Array, is_write: bool = False,
+                           mask: Array | None = None) -> int:
+        """Cycles one memory instruction (a whole (ops, LANES) trace) holds
+        the pipeline, including per-instruction controller overhead."""
+        cyc = int(self.op_cycles(jnp.asarray(addrs), mask, is_write).sum())
+        return cyc + self._instruction_overhead(is_write)
+
+    def cost_trace(self, load_addrs: list, store_addrs: list,
+                   tw_addrs: list | None = None, compute_cycles: int = 0,
+                   op_counts: dict | None = None) -> TraceCost:
+        """Cost a full program trace (lists of (ops, LANES) address blocks)."""
+        cost = TraceCost(compute_cycles=compute_cycles)
+        for a in load_addrs:
+            cost.load_cycles += self.instruction_cycles(a, is_write=False)
+            cost.n_load_ops += a.shape[0]
+        for a in store_addrs:
+            cost.store_cycles += self.instruction_cycles(a, is_write=True)
+            cost.n_store_ops += a.shape[0]
+        for a in (tw_addrs or []):
+            cost.tw_load_cycles += self.instruction_cycles(a, is_write=False)
+            cost.n_tw_ops += a.shape[0]
+        if op_counts:
+            cost.fp_ops = op_counts.get("fp", 0)
+            cost.int_ops = op_counts.get("int", 0)
+            cost.imm_ops = op_counts.get("imm", 0)
+            cost.other_ops = op_counts.get("other", 0)
+        return cost
+
+    def time_us(self, cycles: int) -> float:
+        return cycles / self.fmax_mhz
+
+    # -- program execution -------------------------------------------------
+
+    def run_program(self, program, init_memory=None, execute: bool = True):
+        """Run (and/or cost) an ISA program on this memory (see isa.vm)."""
+        import numpy as np
+
+        from repro.isa.assembler import MemLoad, MemStore
+        from repro.isa.vm import run_program as _run
+        if init_memory is None:
+            n_words = 1 + max(
+                [int(np.max(i.addrs)) for i in program.instrs
+                 if isinstance(i, (MemLoad, MemStore))] or [0])
+            init_memory = np.zeros(n_words, np.float32)
+        return _run(program, self.spec, init_memory, execute=execute)
+
+    # -- area model --------------------------------------------------------
+
+    def resources(self):
+        from repro.core import cost as costmod
+        return costmod.memory_resources(self.spec)
+
+    def footprint_alms(self, capacity_kb: float) -> float:
+        from repro.core import cost as costmod
+        return costmod.footprint_alms(self.spec, capacity_kb)
+
+    def processor_footprint_alms(self, capacity_kb: float) -> float:
+        from repro.core import cost as costmod
+        return costmod.processor_footprint_alms(self.spec, capacity_kb)
+
+
+class BankedMemory(MemoryArchitecture):
+    """B-bank arbitrated memory (paper §III): per-op cycles = max per-bank
+    popcount; reads optionally broadcast-coalesce (beyond-paper)."""
+
+    def __init__(self, n_banks: int = 16, mapping: str = "lsb",
+                 shift: int = 1, broadcast: bool = False,
+                 spec: MemSpec | None = None):
+        if spec is None:
+            spec = _banked_spec(n_banks, mapping, shift, broadcast)
+        assert spec.is_banked, spec
+        super().__init__(spec)
+
+    @property
+    def n_banks(self) -> int:
+        return self.spec.n_banks
+
+    @property
+    def mapping(self) -> str:
+        return self.spec.mapping
+
+    @property
+    def broadcast(self) -> bool:
+        return self.spec.broadcast
+
+    @property
+    def layout(self) -> BankedLayout:
+        return BankedLayout(self.n_banks, self.mapping, self.spec.map_shift)
+
+    def banks_of(self, addrs: Array) -> Array:
+        kw = ({"shift": self.spec.map_shift}
+              if self.mapping == "offset" else {})
+        return bank_of(jnp.asarray(addrs, jnp.int32), self.n_banks,
+                       self.mapping, **kw)
+
+    def op_cycles(self, addrs: Array, mask: Array | None = None,
+                  is_write: bool = False) -> Array:
+        addrs = jnp.asarray(addrs, jnp.int32)
+        banks = self.banks_of(addrs)
+        if self.broadcast and not is_write:
+            return max_conflicts_broadcast(addrs, banks, self.n_banks)
+        return max_conflicts(banks, self.n_banks, mask)
+
+    def _instruction_overhead(self, is_write: bool) -> int:
+        return (ctl.write_overhead(self.n_banks) if is_write
+                else ctl.read_overhead(self.n_banks))
+
+
+class MultiPortMemory(MemoryArchitecture):
+    """nR-mW replicated multi-port memory: deterministic ceil(active/ports)
+    issue; the -VB variant arbitrates writes over 4 pseudo-banks."""
+
+    def __init__(self, read_ports: int = 4, write_ports: int = 1,
+                 vb: bool = False, spec: MemSpec | None = None):
+        if spec is None:
+            spec = _multiport_spec(read_ports, write_ports, vb)
+        assert not spec.is_banked, spec
+        super().__init__(spec)
+
+    @property
+    def read_ports(self) -> int:
+        return self.spec.read_ports
+
+    @property
+    def write_ports(self) -> int:
+        return self.spec.write_ports
+
+    @property
+    def vb_write_banks(self) -> int:
+        return self.spec.vb_write_banks
+
+    def op_cycles(self, addrs: Array, mask: Array | None = None,
+                  is_write: bool = False) -> Array:
+        addrs = jnp.asarray(addrs, jnp.int32)
+        if is_write and self.vb_write_banks:
+            banks = bank_of(addrs, self.vb_write_banks, "lsb")
+            return max_conflicts(banks, self.vb_write_banks, mask)
+        ports = self.write_ports if is_write else self.read_ports
+        if mask is None:
+            active = jnp.full((addrs.shape[0],), LANES, jnp.int32)
+        else:
+            # only active lanes issue requests (predicated ops)
+            active = jnp.asarray(mask).astype(jnp.int32).sum(axis=-1)
+        return (active + ports - 1) // ports
+
+    def _instruction_overhead(self, is_write: bool) -> int:
+        if is_write and self.vb_write_banks:
+            return ctl.write_overhead(self.vb_write_banks)
+        return 0
+
+
+@functools.lru_cache(maxsize=None)
+def from_spec(spec: MemSpec) -> MemoryArchitecture:
+    """Wrap a frozen MemSpec in its architecture class (cached: specs are
+    value objects, architectures are stateless)."""
+    if spec.is_banked:
+        return BankedMemory(spec=spec)
+    return MultiPortMemory(spec=spec)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, MemoryArchitecture] = {}
+
+_BANKED_NAME = re.compile(
+    r"^(?P<banks>\d+)B(?:-(?P<mapping>[a-z]+))?(?P<bcast>-bcast)?$")
+_MULTIPORT_NAME = re.compile(
+    r"^(?P<r>\d+)R-(?P<w>\d+)W(?P<vb>-VB)?$")
+
+
+def register(arch: MemoryArchitecture,
+             name: str | None = None) -> MemoryArchitecture:
+    """Register an architecture under its (or an explicit) name."""
+    _REGISTRY[name or arch.name] = arch
+    return arch
+
+
+def _parse(name: str) -> MemoryArchitecture | None:
+    m = _BANKED_NAME.match(name)
+    if m:
+        mapping = m.group("mapping") or "lsb"
+        if mapping == "bcast":          # "16B-bcast" (lsb map + broadcast)
+            mapping, bcast = "lsb", True
+        else:
+            bcast = bool(m.group("bcast"))
+        if mapping not in BANK_MAPS:
+            return None
+        return BankedMemory(int(m.group("banks")), mapping, broadcast=bcast)
+    m = _MULTIPORT_NAME.match(name)
+    if m:
+        return MultiPortMemory(int(m.group("r")), int(m.group("w")),
+                               vb=bool(m.group("vb")))
+    return None
+
+
+def get(name: str) -> MemoryArchitecture:
+    """Resolve an architecture by name: registered first, then parsed from
+    the naming convention ("16B-offset", "32B-xor", "4R-2W", ...)."""
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    arch = _parse(name)
+    if arch is None:
+        raise KeyError(
+            f"unknown memory architecture {name!r}; registered: "
+            f"{sorted(_REGISTRY)}")
+    return arch
+
+
+def names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def resolve(arch) -> MemoryArchitecture:
+    """Coerce a name / MemSpec / MemoryArchitecture to an architecture."""
+    if isinstance(arch, MemoryArchitecture):
+        return arch
+    if isinstance(arch, MemSpec):
+        return from_spec(arch)
+    if isinstance(arch, str):
+        return get(arch)
+    raise TypeError(f"cannot resolve {arch!r} to a MemoryArchitecture")
+
+
+#: The nine architectures benchmarked in the paper (Tables II/III), in the
+#: same order as the legacy ``memsim.PAPER_MEMORIES`` spec tuple (which is
+#: kept as a thin view of these).
+def _register_paper_architectures() -> tuple[MemoryArchitecture, ...]:
+    from repro.core.memsim import PAPER_MEMORIES
+    return tuple(register(from_spec(s)) for s in PAPER_MEMORIES)
+
+
+PAPER_ARCHITECTURES: tuple[MemoryArchitecture, ...] = (
+    _register_paper_architectures())
+
+#: Table II uses the 8 memories without the VB variant (the same filter as
+#: the legacy memsim.TRANSPOSE_MEMORIES spec tuple, which stays the single
+#: source of truth for the exclusion).
+def _transpose_architectures() -> tuple[MemoryArchitecture, ...]:
+    from repro.core.memsim import TRANSPOSE_MEMORIES
+    return tuple(from_spec(s) for s in TRANSPOSE_MEMORIES)
+
+
+TRANSPOSE_ARCHITECTURES: tuple[MemoryArchitecture, ...] = (
+    _transpose_architectures())

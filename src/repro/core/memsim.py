@@ -20,16 +20,10 @@ emulated true-dual-port M20K mode).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Literal
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-
-from repro.core import controllers as ctl
-from repro.core.bankmap import bank_of
-from repro.core.conflicts import max_conflicts
 
 Array = jnp.ndarray
 
@@ -103,31 +97,21 @@ TRANSPOSE_MEMORIES: tuple[MemSpec, ...] = tuple(
 )
 
 
-def _map_kwargs(spec: MemSpec) -> dict:
-    return {"shift": spec.map_shift} if spec.mapping == "offset" else {}
-
-
 # --------------------------------------------------------------------------
-# Timing
+# Timing — legacy shims delegating to the MemoryArchitecture classes
+# (repro.core.arch owns the conflict/cycle model since the API redesign).
 # --------------------------------------------------------------------------
 
 def op_conflict_cycles(spec: MemSpec, addrs: Array, mask: Array | None = None,
                        is_write: bool = False) -> Array:
-    """(ops, LANES) addresses -> (ops,) cycles each operation occupies memory."""
-    addrs = jnp.asarray(addrs, jnp.int32)
-    n_ops = addrs.shape[0]
-    if spec.is_banked:
-        banks = bank_of(addrs, spec.n_banks, spec.mapping, **_map_kwargs(spec))
-        if spec.broadcast and not is_write:
-            from repro.core.conflicts import max_conflicts_broadcast
-            return max_conflicts_broadcast(addrs, banks, spec.n_banks)
-        return max_conflicts(banks, spec.n_banks, mask)
-    if is_write and spec.vb_write_banks:
-        banks = bank_of(addrs, spec.vb_write_banks, "lsb")
-        return max_conflicts(banks, spec.vb_write_banks, mask)
-    ports = spec.write_ports if is_write else spec.read_ports
-    per_op = -(-LANES // ports)
-    return jnp.full((n_ops,), per_op, jnp.int32)
+    """(ops, LANES) addresses -> (ops,) cycles each operation occupies memory.
+
+    Multi-port memories cost only the *active* lanes under ``mask``
+    (ceil(active/ports) per op); banked memories arbitrate active lanes only.
+    """
+    from repro.core import arch as _arch
+    return _arch.from_spec(spec).op_cycles(addrs, mask=mask,
+                                           is_write=is_write)
 
 
 def instruction_cycles(spec: MemSpec, addrs: Array, is_write: bool,
@@ -138,13 +122,9 @@ def instruction_cycles(spec: MemSpec, addrs: Array, is_write: bool,
     multi-port memories issue deterministically with negligible overhead
     (their controller is a simple round-robin, paper Table I: 700 ALMs).
     """
-    cyc = int(op_conflict_cycles(spec, addrs, mask, is_write).sum())
-    if spec.is_banked:
-        cyc += (ctl.write_overhead(spec.n_banks) if is_write
-                else ctl.read_overhead(spec.n_banks))
-    elif is_write and spec.vb_write_banks:
-        cyc += ctl.write_overhead(spec.vb_write_banks)
-    return cyc
+    from repro.core import arch as _arch
+    return _arch.from_spec(spec).instruction_cycles(addrs, is_write=is_write,
+                                                    mask=mask)
 
 
 # --------------------------------------------------------------------------
@@ -172,9 +152,11 @@ class Memory:
         addrs = jnp.asarray(addrs, jnp.int32)
         values = jnp.asarray(values, jnp.float32)
         if mask is not None:
-            # predicated scatter: route masked-off lanes to a scratch word
-            scratch = self.words.shape[0] - 1
-            addrs = jnp.where(mask.astype(bool), addrs, scratch)
+            # predicated scatter: send masked-off lanes out of bounds and let
+            # XLA drop them (jit-safe; never corrupts a real word)
+            addrs = jnp.where(mask.astype(bool), addrs, self.words.shape[0])
+            return Memory(self.words.at[addrs.reshape(-1)].set(
+                values.reshape(-1), mode="drop"))
         return Memory(self.words.at[addrs.reshape(-1)].set(values.reshape(-1)))
 
 
@@ -224,20 +206,11 @@ def cost_trace(spec: MemSpec,
                tw_addrs: list[Array] | None = None,
                compute_cycles: int = 0,
                op_counts: dict | None = None) -> TraceCost:
-    """Cost a full program trace (lists of per-instruction (ops, LANES) addrs)."""
-    cost = TraceCost(compute_cycles=compute_cycles)
-    for a in load_addrs:
-        cost.load_cycles += instruction_cycles(spec, a, is_write=False)
-        cost.n_load_ops += a.shape[0]
-    for a in store_addrs:
-        cost.store_cycles += instruction_cycles(spec, a, is_write=True)
-        cost.n_store_ops += a.shape[0]
-    for a in (tw_addrs or []):
-        cost.tw_load_cycles += instruction_cycles(spec, a, is_write=False)
-        cost.n_tw_ops += a.shape[0]
-    if op_counts:
-        cost.fp_ops = op_counts.get("fp", 0)
-        cost.int_ops = op_counts.get("int", 0)
-        cost.imm_ops = op_counts.get("imm", 0)
-        cost.other_ops = op_counts.get("other", 0)
-    return cost
+    """Cost a full program trace (lists of per-instruction (ops, LANES) addrs).
+
+    Legacy shim: delegates to ``MemoryArchitecture.cost_trace``.
+    """
+    from repro.core import arch as _arch
+    return _arch.from_spec(spec).cost_trace(
+        load_addrs, store_addrs, tw_addrs=tw_addrs,
+        compute_cycles=compute_cycles, op_counts=op_counts)

@@ -23,4 +23,17 @@ Kernels:
   fft_stage         — radix-4 DIF butterfly stage (the paper's FFT workload)
   banked_transpose  — VMEM-tiled matrix transpose (the paper's other
                       workload)
+
+All seven self-register with ``repro.kernels.registry`` on import;
+``kernels.get("banked_gather").run(arch, table, idx)`` dispatches uniformly
+(see registry.py for the Kernel protocol and the one-decorator registration
+path for new kernels).
 """
+from repro.kernels import registry
+from repro.kernels.registry import Kernel, register, register_kernel
+
+get = registry.get
+names = registry.names
+
+__all__ = ["registry", "Kernel", "register", "register_kernel", "get",
+           "names"]

@@ -1,4 +1,26 @@
 from repro.kernels.banked_gather.ops import (banked_gather, to_banked_layout,
                                              from_banked_layout)
+from repro.kernels.banked_gather.ref import banked_gather_ref
+from repro.kernels.registry import Kernel, register, row_stream_cost
+
+
+def _run(arch, table, idx, *, interpret=True):
+    """Gather logical rows ``idx`` from a logical table under ``arch``'s
+    storage layout (multi-port memories replicate data: no swizzle)."""
+    lay = arch.layout
+    if lay is None:
+        return banked_gather_ref(table, idx)
+    return banked_gather(lay.to_banked(table), idx, lay.n_banks, lay.mapping,
+                         shift=lay.shift, interpret=interpret)
+
+
+register(Kernel(
+    name="banked_gather",
+    pallas=_run,
+    ref=lambda arch, table, idx, **_: banked_gather_ref(table, idx),
+    cost=lambda arch, table, idx, **_: row_stream_cost(arch, idx,
+                                                       is_write=False),
+    description="bank-major row gather (embedding / paged KV read path)",
+))
 
 __all__ = ["banked_gather", "to_banked_layout", "from_banked_layout"]

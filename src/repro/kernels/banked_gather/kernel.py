@@ -33,23 +33,16 @@ def _gather_kernel(idx_ref, table_ref, out_ref):
 
 
 def _bank_physical_row(r, n_banks: int, log2_banks: int, rows_per_bank: int,
-                       mapping: str):
-    if mapping == "offset":
-        bank = (r >> 1) & (n_banks - 1)
-        # slot: remove the bank bits at position [log2B:1], keep bit 0
-        slot = ((r >> (log2_banks + 1)) << 1) | (r & 1)
-    elif mapping == "xor":
-        bank = (r ^ (r >> log2_banks)) & (n_banks - 1)
-        slot = r >> log2_banks
-    else:  # lsb
-        bank = r & (n_banks - 1)
-        slot = r >> log2_banks
-    return bank * rows_per_bank + slot
+                       mapping: str, shift: int = 1):
+    # single source of truth for the layout math (trace-safe in index maps)
+    del log2_banks
+    from repro.core.arch import physical_row_of
+    return physical_row_of(r, n_banks, rows_per_bank, mapping, shift)
 
 
 def banked_gather_kernel(table_banked: jax.Array, idx: jax.Array,
                          n_banks: int, mapping: str = "lsb",
-                         interpret: bool = True) -> jax.Array:
+                         shift: int = 1, interpret: bool = True) -> jax.Array:
     """table_banked: (V, D) already in bank-major physical layout;
     idx: (N,) int32 logical rows.  Returns (N, D) gathered rows."""
     v, d = table_banked.shape
@@ -60,7 +53,7 @@ def banked_gather_kernel(table_banked: jax.Array, idx: jax.Array,
 
     def table_map(i, j, idx_ref):
         phys = _bank_physical_row(idx_ref[i], n_banks, log2b, rows_per_bank,
-                                  mapping)
+                                  mapping, shift)
         return (phys, j)
 
     def out_map(i, j, idx_ref):

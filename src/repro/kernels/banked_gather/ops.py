@@ -1,4 +1,9 @@
-"""Public banked-gather op: logical-view wrapper over the bank-major kernel."""
+"""Public banked-gather op: logical-view wrapper over the bank-major kernel.
+
+The logical↔physical row math lives in ``repro.core.arch.BankedLayout``
+(single source of truth since the API redesign); the functions here are
+thin legacy-compatible wrappers over it.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,44 +11,33 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.bankmap import bank_of
+from repro.core.arch import BankedLayout
 from repro.kernels.banked_gather.kernel import banked_gather_kernel
-
-
-def _slot(r: jnp.ndarray, n_banks: int, mapping: str) -> jnp.ndarray:
-    log2b = n_banks.bit_length() - 1
-    if mapping == "offset":
-        return ((r >> (log2b + 1)) << 1) | (r & 1)
-    return r >> log2b
 
 
 def physical_rows(v: int, n_banks: int, mapping: str) -> jnp.ndarray:
     """logical row -> physical (bank-major) row, vectorized.
-    (offset map uses shift=1, matching kernel._bank_physical_row)"""
-    r = jnp.arange(v, dtype=jnp.int32)
-    kw = {"shift": 1} if mapping == "offset" else {}
-    bank = bank_of(r, n_banks, mapping, **kw)
-    return bank * (v // n_banks) + _slot(r, n_banks, mapping)
+    (offset map uses shift=1, matching the paper's layout calibration)"""
+    return BankedLayout(n_banks, mapping).physical_rows(v)
 
 
 def to_banked_layout(table: jnp.ndarray, n_banks: int,
                      mapping: str = "lsb") -> jnp.ndarray:
     """Host-side relayout: scatter logical rows into bank-major order."""
-    phys = physical_rows(table.shape[0], n_banks, mapping)
-    return jnp.zeros_like(table).at[phys].set(table)
+    return BankedLayout(n_banks, mapping).to_banked(table)
 
 
 def from_banked_layout(table_banked: jnp.ndarray, n_banks: int,
                        mapping: str = "lsb") -> jnp.ndarray:
-    phys = physical_rows(table_banked.shape[0], n_banks, mapping)
-    return table_banked[phys]
+    return BankedLayout(n_banks, mapping).from_banked(table_banked)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_banks", "mapping", "interpret"))
+                   static_argnames=("n_banks", "mapping", "shift",
+                                    "interpret"))
 def banked_gather(table_banked: jnp.ndarray, idx: jnp.ndarray,
-                  n_banks: int = 16, mapping: str = "lsb",
+                  n_banks: int = 16, mapping: str = "lsb", shift: int = 1,
                   interpret: bool = True) -> jnp.ndarray:
     """Gather logical rows `idx` from a bank-major table (see kernel.py)."""
     return banked_gather_kernel(table_banked, idx, n_banks, mapping,
-                                interpret=interpret)
+                                shift=shift, interpret=interpret)

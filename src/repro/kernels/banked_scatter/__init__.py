@@ -1,3 +1,27 @@
 from repro.kernels.banked_scatter.ops import banked_scatter
+from repro.kernels.banked_scatter.ref import banked_scatter_ref
+from repro.kernels.registry import Kernel, register, row_stream_cost
+
+
+def _run(arch, table, idx, updates, *, interpret=True):
+    """Scatter ``updates`` into logical rows ``idx`` of a logical table;
+    returns the updated table in logical order."""
+    lay = arch.layout
+    if lay is None:
+        return banked_scatter_ref(table, idx, updates)
+    out = banked_scatter(lay.to_banked(table), idx, updates, lay.n_banks,
+                         lay.mapping, shift=lay.shift, interpret=interpret)
+    return lay.from_banked(out)
+
+
+register(Kernel(
+    name="banked_scatter",
+    pallas=_run,
+    ref=lambda arch, table, idx, updates, **_: banked_scatter_ref(
+        table, idx, updates),
+    cost=lambda arch, table, idx, updates, **_: row_stream_cost(
+        arch, idx, is_write=True),
+    description="bank-major row scatter (paged KV write path)",
+))
 
 __all__ = ["banked_scatter"]

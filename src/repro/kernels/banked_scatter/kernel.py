@@ -37,7 +37,7 @@ def _scatter_kernel(idx_ref, updates_ref, table_ref, out_ref):
 
 def banked_scatter_kernel(table_banked: jax.Array, idx: jax.Array,
                           updates: jax.Array, n_banks: int,
-                          mapping: str = "lsb",
+                          mapping: str = "lsb", shift: int = 1,
                           interpret: bool = True) -> jax.Array:
     """Write updates[i] to logical row idx[i] of a bank-major table."""
     v, d = table_banked.shape
@@ -52,7 +52,7 @@ def banked_scatter_kernel(table_banked: jax.Array, idx: jax.Array,
 
     def out_map(i, j, idx_ref):
         phys = _bank_physical_row(idx_ref[i], n_banks, log2b, rows_per_bank,
-                                  mapping)
+                                  mapping, shift)
         return (phys, j)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(

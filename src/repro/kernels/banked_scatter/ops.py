@@ -9,12 +9,13 @@ from repro.kernels.banked_scatter.kernel import banked_scatter_kernel
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_banks", "mapping", "interpret"))
+                   static_argnames=("n_banks", "mapping", "shift",
+                                    "interpret"))
 def banked_scatter(table_banked: jnp.ndarray, idx: jnp.ndarray,
                    updates: jnp.ndarray, n_banks: int = 16,
-                   mapping: str = "lsb",
+                   mapping: str = "lsb", shift: int = 1,
                    interpret: bool = True) -> jnp.ndarray:
     """Scatter update rows into logical rows `idx` of a bank-major table
     (see kernel.py; pairs with banked_gather for the paged-KV write path)."""
     return banked_scatter_kernel(table_banked, idx, updates, n_banks,
-                                 mapping, interpret=interpret)
+                                 mapping, shift=shift, interpret=interpret)

@@ -1,3 +1,12 @@
 from repro.kernels.carry_arbiter.ops import carry_arbiter
+from repro.kernels.carry_arbiter.ref import carry_arbiter_ref
+from repro.kernels.registry import Kernel, register
+
+register(Kernel(
+    name="carry_arbiter",
+    pallas=lambda arch, requests, **kw: carry_arbiter(requests, **kw),
+    ref=lambda arch, requests, **_: carry_arbiter_ref(requests),
+    description="carry-chain arbiter grant-schedule generator (paper Fig 4)",
+))
 
 __all__ = ["carry_arbiter"]

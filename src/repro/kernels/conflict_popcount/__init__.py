@@ -1,3 +1,27 @@
 from repro.kernels.conflict_popcount.ops import conflict_popcount
+from repro.kernels.conflict_popcount.ref import conflict_popcount_ref
+from repro.kernels.registry import Kernel, register
+
+
+def _n_banks(arch, n_banks=None) -> int:
+    if n_banks is not None:
+        return n_banks
+    if arch.is_banked:
+        return arch.n_banks
+    if arch.vb_write_banks:            # 4R-1W-VB write side arbitration
+        return arch.vb_write_banks
+    raise NotImplementedError(
+        f"{arch.name} has no banks to count conflicts over; pass n_banks "
+        f"explicitly")
+
+
+register(Kernel(
+    name="conflict_popcount",
+    pallas=lambda arch, banks, n_banks=None, **kw: conflict_popcount(
+        banks, _n_banks(arch, n_banks), **kw),
+    ref=lambda arch, banks, n_banks=None, **_: conflict_popcount_ref(
+        banks, _n_banks(arch, n_banks)),
+    description="issue-controller conflict counting (one-hot popcount + max)",
+))
 
 __all__ = ["conflict_popcount"]

@@ -1,3 +1,17 @@
 from repro.kernels.moe_dispatch.ops import moe_dispatch_positions
+from repro.kernels.moe_dispatch.ref import moe_dispatch_ref
+from repro.kernels.registry import Kernel, register, row_stream_cost
+
+register(Kernel(
+    name="moe_dispatch",
+    pallas=lambda arch, experts, n_experts, capacity, **kw:
+        moe_dispatch_positions(experts, n_experts, capacity, **kw),
+    ref=lambda arch, experts, n_experts, capacity, **_:
+        moe_dispatch_ref(experts, n_experts, capacity),
+    # arbiter occupancy when experts play the role of banks (write side)
+    cost=lambda arch, experts, n_experts, capacity, **_:
+        row_stream_cost(arch, experts, is_write=True),
+    description="running-count MoE token dispatch (arbiter math at scale)",
+))
 
 __all__ = ["moe_dispatch_positions"]

@@ -65,7 +65,8 @@ def moe_dispatch_kernel(experts: jax.Array, n_experts: int, capacity: int,
         out_shape=[jax.ShapeDtypeStruct((r, 1), jnp.int32),
                    jax.ShapeDtypeStruct((r, 1), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((8, n_experts), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=(getattr(pltpu, "CompilerParams", None)
+                         or pltpu.TPUCompilerParams)(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(experts.astype(jnp.int32)[:, None])

@@ -1,0 +1,123 @@
+"""Kernel registry — layer 2 of the three-layer public API (see README.md).
+
+A ``Kernel`` bundles the three entry points every kernel package already
+ships, behind one common signature whose first argument is a
+``MemoryArchitecture`` (or a name resolvable by ``repro.core.arch.get``):
+
+  * ``pallas(arch, *args)`` — the TPU Pallas path, operating on *logical*
+    inputs (bank-major relayout, where needed, is derived from
+    ``arch.layout`` internally);
+  * ``ref(arch, *args)``    — the pure-jnp oracle;
+  * ``cost(arch, *args)``   — cycles the operation costs under ``arch``'s
+    conflict/cycle model (optional; raises NotImplementedError when a
+    kernel has no meaningful address trace).
+
+Usage::
+
+    from repro import kernels
+    out = kernels.get("banked_gather").run(arch.get("16B-offset"), table, idx)
+
+New kernels are one decorator away::
+
+    @register_kernel("my_kernel", ref=my_ref)
+    def my_pallas(arch, x):
+        ...
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.core import arch as _arch
+
+
+@dataclass(frozen=True)
+class Kernel:
+    """One registered kernel: uniform (arch, *args) entry points."""
+    name: str
+    pallas: Callable
+    ref: Callable
+    cost: Callable | None = None
+    description: str = ""
+
+    def run(self, arch, *args, **kwargs):
+        """Dispatch the Pallas path under an architecture (or its name)."""
+        return self.pallas(_arch.resolve(arch), *args, **kwargs)
+
+    def reference(self, arch, *args, **kwargs):
+        """Run the pure-jnp oracle (same signature as ``run``)."""
+        return self.ref(_arch.resolve(arch), *args, **kwargs)
+
+    def cost_cycles(self, arch, *args, **kwargs):
+        """Cycles this operation costs under ``arch``'s timing model."""
+        if self.cost is None:
+            raise NotImplementedError(
+                f"kernel {self.name!r} has no cost model")
+        return self.cost(_arch.resolve(arch), *args, **kwargs)
+
+
+_KERNELS: dict[str, Kernel] = {}
+
+#: Kernel packages that self-register on import (the paper's seven).
+_BUILTIN_PACKAGES = (
+    "banked_gather", "banked_scatter", "banked_transpose", "carry_arbiter",
+    "conflict_popcount", "fft_stage", "moe_dispatch",
+)
+
+
+def register(kernel: Kernel) -> Kernel:
+    """Register a fully-built Kernel; returns it (usable as a decorator on
+    module-level Kernel instances)."""
+    _KERNELS[kernel.name] = kernel
+    return kernel
+
+
+def register_kernel(name: str, *, ref: Callable,
+                    cost: Callable | None = None,
+                    description: str = "") -> Callable:
+    """Decorator form: registers the decorated function as the Pallas entry
+    point of a new Kernel and returns the Kernel."""
+    def deco(pallas: Callable) -> Kernel:
+        return register(Kernel(name=name, pallas=pallas, ref=ref, cost=cost,
+                               description=description))
+    return deco
+
+
+def _ensure_builtins() -> None:
+    import importlib
+    for pkg in _BUILTIN_PACKAGES:
+        importlib.import_module(f"repro.kernels.{pkg}")
+
+
+def get(name: str) -> Kernel:
+    """Resolve a kernel by name (imports the builtin packages on demand)."""
+    if name not in _KERNELS:
+        _ensure_builtins()
+    try:
+        return _KERNELS[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel {name!r}; registered: "
+                       f"{sorted(_KERNELS)}") from None
+
+
+def names() -> tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_KERNELS))
+
+
+# --------------------------------------------------------------------------
+# Shared cost helpers (kernels whose address trace is their index stream)
+# --------------------------------------------------------------------------
+
+def row_stream_cost(arch, idx, is_write: bool) -> int:
+    """Cost a row-index request stream: LANES indices per operation, costed
+    as word addresses under the architecture's conflict model."""
+    import jax.numpy as jnp
+
+    from repro.core.memsim import LANES
+    idx = jnp.asarray(idx, jnp.int32).reshape(-1)
+    pad = (-idx.shape[0]) % LANES
+    if pad:
+        # replicate the last request to fill the trailing op (worst-case-safe)
+        idx = jnp.concatenate([idx, jnp.broadcast_to(idx[-1:], (pad,))])
+    return arch.instruction_cycles(idx.reshape(-1, LANES), is_write=is_write)

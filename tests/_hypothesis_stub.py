@@ -1,0 +1,82 @@
+"""Minimal drop-in for the ``hypothesis`` API surface this suite uses
+(``given``, ``settings``, ``strategies.integers/lists/sampled_from``).
+
+The container image does not ship hypothesis and the project cannot install
+packages at test time; conftest.py registers this module as ``hypothesis``
+only when the real library is missing.  Examples are drawn from a fixed-seed
+RNG, so runs are deterministic (a weaker guarantee than real hypothesis —
+no shrinking, no coverage-guided generation — but the property bodies still
+execute across a spread of inputs).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    return _Strategy(lambda rng: [elements.draw(rng) for _ in
+                                  range(rng.randint(min_size, max_size))])
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: rng.choice(items))
+
+
+def settings(**kwargs):
+    max_examples = kwargs.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(0xBA27)
+            for _ in range(n):
+                fn(*args, *(s.draw(rng) for s in strategies), **kwargs)
+        # Hide the strategy-filled (trailing) parameters from pytest, which
+        # would otherwise look for fixtures with those names.
+        params = list(inspect.signature(fn).parameters.values())
+        kept = params[:len(params) - len(strategies)]
+        wrapper.__signature__ = inspect.Signature(kept)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.lists = lists
+    strategies.sampled_from = sampled_from
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
