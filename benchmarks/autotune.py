@@ -1,0 +1,76 @@
+"""Autotune reproduction: `repro.tune` re-discovers the paper's per-workload
+architecture winners (the implicit conclusion of Tables II/III — which of the
+9 memories you should pick for each algorithm × size).
+
+For every paper workload the exhaustive search must land on the memory with
+the best Table II/III wall time, and the hillclimb must agree while costing
+fewer evaluations.  `--smoke` runs the 32×32 transpose cells only (CI gate
+for the tune subsystem).
+
+CSV: name,us_per_call,derived (winner | paper winner | match | evals).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.paper_data import TABLE2, TABLE3
+from repro import tune
+from repro.bench import fft_workload, transpose_workload
+
+TRANSPOSE_SIZES = (32, 64, 128)
+FFT_RADICES = (4, 8, 16)
+
+#: Table II excludes the VB variant (the paper doesn't run it on transpose)
+TRANSPOSE_SPACE = tune.ArchSpace(multiports=("4R-1W", "4R-2W"))
+FFT_SPACE = tune.PAPER_SPACE
+
+
+def paper_winner(table: dict, time_col: int) -> str:
+    return min(table, key=lambda name: table[name][time_col])
+
+
+def _cases(smoke: bool):
+    yield (transpose_workload(32), TRANSPOSE_SPACE,
+           paper_winner(TABLE2[32], 3))
+    if smoke:
+        return
+    for n in TRANSPOSE_SIZES[1:]:
+        yield (transpose_workload(n), TRANSPOSE_SPACE,
+               paper_winner(TABLE2[n], 3))
+    for radix in FFT_RADICES:
+        yield (fft_workload(4096, radix), FFT_SPACE,
+               paper_winner(TABLE3[radix], 4))
+
+
+def rows(smoke: bool = False):
+    out = []
+    for workload, space, paper_pick in _cases(smoke):
+        for strategy in ("exhaustive", "hillclimb"):
+            ranked = tune.search(workload=workload, space=space,
+                                 strategy=strategy)
+            best = ranked[0]
+            out.append({
+                "name": f"autotune_{workload.name}_{strategy}",
+                "us_per_call": round(best.time_us, 2),
+                "winner": best.arch,
+                "paper_winner": paper_pick,
+                "match": best.arch == paper_pick,
+                "total_cycles": best.total_cycles,
+                "evals": len(ranked),
+            })
+    return out
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    for r in rows(smoke="--smoke" in argv):
+        extra = "|".join(f"{k}={v}" for k, v in r.items()
+                         if k not in ("name", "us_per_call"))
+        print(f"{r['name']},{r['us_per_call']},{extra}")
+
+
+if __name__ == "__main__":
+    main()

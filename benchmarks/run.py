@@ -5,24 +5,32 @@ harnesses.  Prints ``name,us_per_call,derived`` CSV (one line per cell).
   table3    — Table III  (FFT radix 4/8/16 × 9 memories, func-verified)
   table1    — Table I    (area model / sector footprints)
   fig9      — Fig 9      (cost vs performance crossover)
+  autotune  — repro.tune re-derives the paper's per-workload winners
   kernels   — Pallas kernel micro-bench (interpret mode)
   roofline  — §Roofline terms from dry-run artifacts (if present)
 """
 from __future__ import annotations
 
+import os
 import sys
+
+# script-style execution (`python benchmarks/run.py`) puts benchmarks/ on
+# sys.path, not the repo root the package imports need
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     sections = sys.argv[1:] or ["table2", "table3", "table1", "fig9",
-                                "beyond", "bankscale", "kernels", "roofline"]
-    from benchmarks import (bank_scaling, beyond_paper, fig9_cost_perf,
-                            kernel_bench, roofline_report, table1_area,
-                            table2_transpose, table3_fft)
+                                "autotune", "beyond", "bankscale", "kernels",
+                                "roofline"]
+    from benchmarks import (autotune, bank_scaling, beyond_paper,
+                            fig9_cost_perf, kernel_bench, roofline_report,
+                            table1_area, table2_transpose, table3_fft)
     mods = {"table2": table2_transpose, "table3": table3_fft,
             "table1": table1_area, "fig9": fig9_cost_perf,
-            "beyond": beyond_paper, "bankscale": bank_scaling,
-            "kernels": kernel_bench, "roofline": roofline_report}
+            "autotune": autotune, "beyond": beyond_paper,
+            "bankscale": bank_scaling, "kernels": kernel_bench,
+            "roofline": roofline_report}
     for s in sections:
         print(f"# --- {s} ---")
         mods[s].main()

@@ -1,0 +1,41 @@
+"""Layer 4 in 60 seconds: pick the right memory architecture for a workload.
+
+Run:  PYTHONPATH=src python examples/autotune_quickstart.py
+"""
+import numpy as np
+
+from repro import tune
+from repro.bench import fft_workload, transpose_workload
+
+# 1. Exhaustive search over the paper's 9 architectures (Table II's implicit
+#    conclusion): which memory should you build for a 64x64 transpose?
+ranked = tune.search(workload=transpose_workload(64),
+                     space=tune.ArchSpace(multiports=("4R-1W", "4R-2W")))
+print("transpose64 ranking (best first):")
+for r in ranked[:3]:
+    print(f"  {r.arch:12s} {r.total_cycles:6d} cyc  {r.time_us:6.2f} us")
+
+# 2. Hillclimb the beyond-paper grid (4..32 banks x 4 maps x broadcast) for
+#    the radix-4 FFT -- same winner as exhaustive, fewer evaluations.
+climbed = tune.search(workload=fft_workload(4096, 4),
+                      space=tune.EXTENDED_SPACE, strategy="hillclimb")
+print(f"\nfft4096r4 hillclimb winner: {climbed[0].arch} "
+      f"({climbed[0].time_us:.1f} us, {len(climbed)} of "
+      f"{len(tune.EXTENDED_SPACE.names())} points evaluated)")
+
+# 3. Any registry kernel with a `trace` generator is tunable: a same-address
+#    gather stream (16-way serialization) wants broadcast coalescing.
+table = np.zeros((256, 64), np.float32)
+hot_idx = np.zeros(512, np.int64)               # every lane hits row 0
+ranked = tune.search("banked_gather", (table, hot_idx),
+                     space=tune.EXTENDED_SPACE)
+print(f"\nhot-row gather winner: {ranked[0].arch} "
+      f"({ranked[0].total_cycles} cyc vs {ranked[-1].total_cycles} worst)")
+
+# 4. The Fig 9 question -- cheapest architecture that still FITS at 224 KB
+#    (multi-port replication stops fitting a sector):
+ranked = tune.search(workload=fft_workload(4096, 16),
+                     objective="area_time", capacity_kb=224.0)
+feasible = [r for r in ranked if r.objective < float("inf")]
+print(f"\n224KB area x time winner: {feasible[0].arch} "
+      f"({len(ranked) - len(feasible)} architectures over capacity)")

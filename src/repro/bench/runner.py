@@ -40,17 +40,32 @@ class Workload:
     oracle: Callable[[np.ndarray], float] | None = None
     meta: dict = field(default_factory=dict)
 
+    def trace(self):
+        """The workload's ``AddressTrace`` (repro.core.trace), built once and
+        costed under every architecture of a sweep — the trace is a pure
+        function of the program, so one lowering serves all cells."""
+        cached = getattr(self, "_trace", None)
+        if cached is None:
+            cached = self.program.address_trace()
+            object.__setattr__(self, "_trace", cached)
+        return cached
+
 
 def _nan_to_blank(x: float) -> float | str:
     return "" if math.isnan(x) else x
 
 
 def run_cell(arch, workload: Workload, execute: bool = False) -> dict:
-    """Cost one (architecture, workload) cell; returns a tidy record."""
+    """Cost one (architecture, workload) cell; returns a tidy record.
+
+    Timing-only cells (the default) cost the workload's cached AddressTrace
+    directly; execute=True additionally runs the program functionally."""
     a = _arch.resolve(arch)
-    res = a.run_program(workload.program, workload.init_memory,
-                        execute=execute)
-    c = res.cost
+    if execute:
+        c = a.run_program(workload.program, workload.init_memory,
+                          execute=True).cost
+    else:
+        c = a.cost(workload.trace())
     rec = {
         "workload": workload.name,
         "arch": a.name,

@@ -167,26 +167,47 @@ class MemoryArchitecture:
         cyc = int(self.op_cycles(jnp.asarray(addrs), mask, is_write).sum())
         return cyc + self._instruction_overhead(is_write)
 
+    def cost(self, addr_trace) -> TraceCost:
+        """Cost an ``AddressTrace`` under this architecture's timing model.
+
+        The single costing entry point of the redesign: kernels' ``trace``
+        generators, the ISA VM, the bench sweep runner, and ``repro.tune``
+        all cost the same artifact through here.  Per-op cycles come from
+        ``op_cycles`` (batched over every op of a kind at once); each source
+        instruction pays the per-instruction controller overhead once.
+        """
+        from repro.core import trace as tr
+        cost = TraceCost(compute_cycles=int(addr_trace.compute_cycles))
+        for kind, is_write, cyc_attr, n_attr in (
+                (tr.KIND_LOAD, False, "load_cycles", "n_load_ops"),
+                (tr.KIND_TW, False, "tw_load_cycles", "n_tw_ops"),
+                (tr.KIND_STORE, True, "store_cycles", "n_store_ops")):
+            sub = addr_trace.of_kind(kind)
+            if not sub.n_ops:
+                continue
+            mask = None if sub.mask is None else jnp.asarray(sub.mask)
+            cyc = int(self.op_cycles(jnp.asarray(sub.addrs), mask,
+                                     is_write).sum())
+            cyc += sub.n_instructions * self._instruction_overhead(is_write)
+            setattr(cost, cyc_attr, cyc)
+            setattr(cost, n_attr, sub.n_ops)
+        for k in ("fp", "int", "imm", "other"):
+            setattr(cost, f"{k}_ops", int(addr_trace.op_counts.get(k, 0)))
+        return cost
+
     def cost_trace(self, load_addrs: list, store_addrs: list,
                    tw_addrs: list | None = None, compute_cycles: int = 0,
                    op_counts: dict | None = None) -> TraceCost:
-        """Cost a full program trace (lists of (ops, LANES) address blocks)."""
-        cost = TraceCost(compute_cycles=compute_cycles)
-        for a in load_addrs:
-            cost.load_cycles += self.instruction_cycles(a, is_write=False)
-            cost.n_load_ops += a.shape[0]
-        for a in store_addrs:
-            cost.store_cycles += self.instruction_cycles(a, is_write=True)
-            cost.n_store_ops += a.shape[0]
-        for a in (tw_addrs or []):
-            cost.tw_load_cycles += self.instruction_cycles(a, is_write=False)
-            cost.n_tw_ops += a.shape[0]
-        if op_counts:
-            cost.fp_ops = op_counts.get("fp", 0)
-            cost.int_ops = op_counts.get("int", 0)
-            cost.imm_ops = op_counts.get("imm", 0)
-            cost.other_ops = op_counts.get("other", 0)
-        return cost
+        """Cost a full program trace given as lists of (ops, LANES) address
+        blocks (one instruction per block).  Legacy entry point: builds an
+        ``AddressTrace`` and delegates to ``cost``."""
+        from repro.core.trace import AddressTrace
+        chunks = ([AddressTrace.from_ops(a, "load") for a in load_addrs]
+                  + [AddressTrace.from_ops(a, "store") for a in store_addrs]
+                  + [AddressTrace.from_ops(a, "tw") for a in (tw_addrs or [])])
+        trace = AddressTrace.concat(*chunks).with_compute(
+            compute_cycles, op_counts)
+        return self.cost(trace)
 
     def time_us(self, cycles: int) -> float:
         return cycles / self.fmax_mhz
@@ -260,7 +281,7 @@ class BankedMemory(MemoryArchitecture):
         addrs = jnp.asarray(addrs, jnp.int32)
         banks = self.banks_of(addrs)
         if self.broadcast and not is_write:
-            return max_conflicts_broadcast(addrs, banks, self.n_banks)
+            return max_conflicts_broadcast(addrs, banks, self.n_banks, mask)
         return max_conflicts(banks, self.n_banks, mask)
 
     def _instruction_overhead(self, is_write: bool) -> int:

@@ -76,21 +76,32 @@ def bank_efficiency(actual_cycles: Array, n_ops: Array) -> Array:
     )
 
 
-def first_occurrence(addrs: Array) -> Array:
+def first_occurrence(addrs: Array, mask: Array | None = None) -> Array:
     """(..., lanes) -> (..., lanes) 1 where the lane's address is the first
-    occurrence within the operation (broadcast coalescing mask)."""
+    occurrence within the operation (broadcast coalescing mask).
+
+    ``mask`` marks active lanes: predicated-off lanes issue no request, so
+    they are never a first occurrence and never shadow a later lane."""
     eq = addrs[..., :, None] == addrs[..., None, :]       # (..., L, L)
     lanes = addrs.shape[-1]
     lower = jnp.tril(jnp.ones((lanes, lanes), bool), k=-1)
+    if mask is not None:
+        active = jnp.asarray(mask).astype(bool)
+        eq = eq & active[..., None, :]       # only active lanes can shadow
     seen_before = (eq & lower).any(axis=-1)               # (..., L)
-    return (~seen_before).astype(jnp.int32)
+    first = ~seen_before
+    if mask is not None:
+        first = first & active
+    return first.astype(jnp.int32)
 
 
-def max_conflicts_broadcast(addrs: Array, banks: Array, n_banks: int) -> Array:
+def max_conflicts_broadcast(addrs: Array, banks: Array, n_banks: int,
+                            mask: Array | None = None) -> Array:
     """Beyond-paper memory feature: a bank serves one *address* per cycle and
     broadcasts it to every requesting lane (commercial-GPU shared-memory
-    semantics).  Cycles = max per-bank count of DISTINCT addresses."""
-    uniq = first_occurrence(addrs)
+    semantics).  Cycles = max per-bank count of DISTINCT addresses (among
+    the active lanes under ``mask``)."""
+    uniq = first_occurrence(addrs, mask)
     return max_conflicts(banks, n_banks, mask=uniq)
 
 

@@ -139,6 +139,19 @@ def footprint_alms(spec: MemSpec, capacity_kb: float) -> float:
     return m20k_area + logic
 
 
+def area_time_score(spec: MemSpec, capacity_kb: float,
+                    time_us: float) -> float:
+    """Fig 9-style cost×performance objective for ``repro.tune``: whole-
+    processor footprint (sector-equivalent ALMs) × runtime.  Lower is
+    better; architectures whose replicated data can't fit the capacity at
+    all score ``inf`` (they're not a design point, per the paper's
+    "effective footprint cost ... quickly becomes prohibitive")."""
+    try:
+        return processor_footprint_alms(spec, capacity_kb) * time_us
+    except ValueError:
+        return float("inf")
+
+
 def processor_footprint_alms(spec: MemSpec, capacity_kb: float) -> float:
     """Whole-processor footprint: memory subsystem + SPs/fetch/decode +
     access controllers (unconstrained placement, ALM-dominated)."""

@@ -99,7 +99,9 @@ TRANSPOSE_MEMORIES: tuple[MemSpec, ...] = tuple(
 
 # --------------------------------------------------------------------------
 # Timing — legacy shims delegating to the MemoryArchitecture classes
-# (repro.core.arch owns the conflict/cycle model since the API redesign).
+# (repro.core.arch owns the conflict/cycle model since the API redesign;
+# the preferred entry point is ``arch.cost(AddressTrace)`` — see
+# repro.core.trace for the first-class request-stream artifact).
 # --------------------------------------------------------------------------
 
 def op_conflict_cycles(spec: MemSpec, addrs: Array, mask: Array | None = None,
@@ -208,7 +210,9 @@ def cost_trace(spec: MemSpec,
                op_counts: dict | None = None) -> TraceCost:
     """Cost a full program trace (lists of per-instruction (ops, LANES) addrs).
 
-    Legacy shim: delegates to ``MemoryArchitecture.cost_trace``.
+    Legacy shim: delegates to ``MemoryArchitecture.cost_trace``, which
+    lowers the lists to one ``repro.core.trace.AddressTrace`` and prices it
+    via ``arch.cost`` — build the AddressTrace directly in new code.
     """
     from repro.core import arch as _arch
     return _arch.from_spec(spec).cost_trace(

@@ -1,0 +1,273 @@
+"""First-class address traces — the artifact the paper's cost model consumes.
+
+An ``AddressTrace`` is the exact request stream a SIMT shared-memory
+subsystem sees, detached from whatever produced it (a Pallas kernel's index
+stream, an ISA program, a synthetic sweep).  One trace can be costed under
+every ``MemoryArchitecture`` via ``arch.cost(trace)`` without re-executing
+anything — the same separation the paper uses to run 51 benchmarks over 9
+memories.
+
+Trace schema
+============
+
+A trace is a flat sequence of memory *operations*.  One operation is one
+clock's worth of ``LANES`` (= 16) lane requests; operations group into
+*instructions* (a load/store macro-op issued by one program instruction —
+multi-word I/Q accesses are several operations under a single instruction,
+which is what makes per-instruction controller overhead accounting exact).
+
+  ``addrs``  (n_ops, LANES) int32   word address requested by each lane
+  ``kinds``  (n_ops,)       int8    ``KIND_LOAD`` / ``KIND_STORE`` /
+                                    ``KIND_TW`` (twiddle loads are reported
+                                    separately, Table III's TW rows)
+  ``instr``  (n_ops,)       int32   instruction id per op (non-decreasing);
+                                    each distinct id pays the architecture's
+                                    per-instruction pipeline overhead once
+  ``mask``   (n_ops, LANES) bool    active lanes (None = all active);
+                                    predicated lanes issue no request
+
+plus the compute-side metadata needed to report full Table II/III rows:
+
+  ``compute_cycles``  int    cycles spent in ALU bundles
+  ``op_counts``       dict   Table "Common Ops" cycle buckets
+                             (``fp`` / ``int`` / ``imm`` / ``other``)
+
+Construction: ``AddressTrace.from_stream`` (one instruction from a flat
+request stream), ``AddressTrace.from_ops`` (pre-shaped operation matrices),
+``AddressTrace.from_program`` (an ISA macro-op program — the VM costs this
+exact object), or incrementally through ``TraceBuilder``.  Traces compose
+with ``+`` and slice with ``[start:stop]`` over operations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.memsim import LANES
+
+KIND_LOAD, KIND_STORE, KIND_TW = 0, 1, 2
+
+_KIND_NAMES = {"load": KIND_LOAD, "store": KIND_STORE, "tw": KIND_TW,
+               "D": KIND_LOAD, "S": KIND_STORE, "TW": KIND_TW}
+
+
+def _kind_code(kind) -> int:
+    if isinstance(kind, str):
+        try:
+            return _KIND_NAMES[kind]
+        except KeyError:
+            raise ValueError(f"unknown op kind {kind!r}; use 'load', "
+                             f"'store' or 'tw'") from None
+    if kind in (KIND_LOAD, KIND_STORE, KIND_TW):
+        return int(kind)
+    raise ValueError(f"unknown op kind {kind!r}")
+
+
+def as_ops(addrs) -> np.ndarray:
+    """(T,), (k, T) or (ops, LANES) request stream -> (ops, LANES) matrix.
+
+    Multi-word instructions issue word 0 for all threads, then word 1, ... —
+    each word is its own run of 16-lane operations (C-order reshape).  A
+    ragged tail replicates the final address into idle lanes (idle lanes
+    re-request the same bank in hardware; negligible for aligned sizes).
+    """
+    a = np.asarray(addrs, np.int32).reshape(-1)
+    pad = (-a.shape[0]) % LANES
+    if pad:
+        a = np.concatenate([a, np.repeat(a[-1], pad)])
+    return a.reshape(-1, LANES)
+
+
+@dataclass(frozen=True, eq=False)
+class AddressTrace:
+    """A costed-object request stream (see module docstring for the schema)."""
+
+    addrs: np.ndarray                 # (n_ops, LANES) int32
+    kinds: np.ndarray                 # (n_ops,) int8
+    instr: np.ndarray                 # (n_ops,) int32
+    mask: np.ndarray | None = None    # (n_ops, LANES) bool, None = all active
+    compute_cycles: int = 0
+    op_counts: dict = field(default_factory=dict)
+    meta: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        a = np.asarray(self.addrs, np.int32).reshape(-1, LANES)
+        object.__setattr__(self, "addrs", a)
+        object.__setattr__(self, "kinds",
+                           np.asarray(self.kinds, np.int8).reshape(-1))
+        object.__setattr__(self, "instr",
+                           np.asarray(self.instr, np.int32).reshape(-1))
+        if self.mask is not None:
+            object.__setattr__(
+                self, "mask", np.asarray(self.mask, bool).reshape(-1, LANES))
+        n = a.shape[0]
+        if self.kinds.shape[0] != n or self.instr.shape[0] != n or (
+                self.mask is not None and self.mask.shape[0] != n):
+            raise ValueError("addrs/kinds/instr/mask op counts disagree")
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def empty(cls) -> "AddressTrace":
+        return cls(np.zeros((0, LANES), np.int32), np.zeros(0, np.int8),
+                   np.zeros(0, np.int32))
+
+    @classmethod
+    def from_ops(cls, addrs, kind="load", mask=None,
+                 meta: dict | None = None) -> "AddressTrace":
+        """One instruction from a pre-shaped / reshapeable op stream."""
+        ops = as_ops(addrs)
+        code = _kind_code(kind)
+        if mask is not None:
+            # ragged tails pad addresses by replicating the last request
+            # (as_ops); the padded idle lanes are inactive, not duplicates
+            mask = np.asarray(mask, bool).reshape(-1)
+            pad = ops.size - mask.shape[0]
+            if pad:
+                mask = np.concatenate([mask, np.zeros(pad, bool)])
+            mask = mask.reshape(ops.shape)
+        return cls(ops, np.full(ops.shape[0], code, np.int8),
+                   np.zeros(ops.shape[0], np.int32), mask,
+                   meta=dict(meta or {}))
+
+    #: alias — a flat per-thread request stream is just the (T,) case
+    from_stream = from_ops
+
+    @classmethod
+    def from_program(cls, program) -> "AddressTrace":
+        """The exact trace an ISA macro-op ``Program`` emits (see isa.vm —
+        the VM costs this very object, so kernel- and VM-derived cycles are
+        cross-validated by construction)."""
+        from repro.isa.assembler import Compute, MemLoad, MemStore
+        b = TraceBuilder(n_threads=program.n_threads)
+        for ins in program.instrs:
+            if isinstance(ins, MemLoad):
+                b.load(ins.addrs, space=ins.space)
+            elif isinstance(ins, MemStore):
+                b.store(ins.addrs)
+            elif isinstance(ins, Compute):
+                b.compute(ins.counts, scalar=ins.scalar)
+            else:  # pragma: no cover
+                raise TypeError(f"unknown instruction {ins!r}")
+        return b.build(meta={"program": program.name, **program.meta})
+
+    @classmethod
+    def concat(cls, *traces: "AddressTrace") -> "AddressTrace":
+        """Compose traces back-to-back.  Each source trace's instruction ids
+        are renumbered densely (sliced / kind-filtered traces may carry
+        sparse ids) and then offset, so every source instruction pays its
+        overhead exactly once; compute cycles and op-count buckets sum over
+        all operands, including memory-less (compute-only) traces."""
+        counts: dict = {}
+        for t in traces:
+            for k, v in t.op_counts.items():
+                counts[k] = counts.get(k, 0) + v
+        compute = sum(t.compute_cycles for t in traces)
+        nonempty = [t for t in traces if t.n_ops]
+        if not nonempty:
+            return cls.empty().with_compute(compute, counts)
+        instrs, off = [], 0
+        any_mask = any(t.mask is not None for t in nonempty)
+        masks = []
+        for t in nonempty:
+            _, dense = np.unique(t.instr, return_inverse=True)
+            instrs.append(dense.astype(np.int32) + off)
+            off += t.n_instructions
+            if any_mask:
+                masks.append(np.ones_like(t.addrs, bool) if t.mask is None
+                             else t.mask)
+        return cls(np.concatenate([t.addrs for t in nonempty]),
+                   np.concatenate([t.kinds for t in nonempty]),
+                   np.concatenate(instrs),
+                   np.concatenate(masks) if any_mask else None,
+                   compute_cycles=compute,
+                   op_counts=counts)
+
+    def __add__(self, other: "AddressTrace") -> "AddressTrace":
+        return AddressTrace.concat(self, other)
+
+    # -- views / slicing ---------------------------------------------------
+
+    @property
+    def n_ops(self) -> int:
+        return self.addrs.shape[0]
+
+    @property
+    def n_instructions(self) -> int:
+        return len(np.unique(self.instr)) if self.n_ops else 0
+
+    @property
+    def n_words(self) -> int:
+        """Smallest word-memory size the trace addresses fit in."""
+        return int(self.addrs.max()) + 1 if self.n_ops else 0
+
+    def _select(self, sel) -> "AddressTrace":
+        return AddressTrace(self.addrs[sel], self.kinds[sel], self.instr[sel],
+                            None if self.mask is None else self.mask[sel],
+                            meta=dict(self.meta))
+
+    def of_kind(self, kind) -> "AddressTrace":
+        """Memory-only sub-trace of one op kind (compute metadata dropped)."""
+        return self._select(self.kinds == _kind_code(kind))
+
+    def loads(self) -> "AddressTrace":
+        return self.of_kind(KIND_LOAD)
+
+    def stores(self) -> "AddressTrace":
+        return self.of_kind(KIND_STORE)
+
+    def tw_loads(self) -> "AddressTrace":
+        return self.of_kind(KIND_TW)
+
+    def __getitem__(self, item) -> "AddressTrace":
+        if not isinstance(item, slice):
+            raise TypeError("AddressTrace slices over op ranges only")
+        return self._select(item)
+
+    def with_compute(self, compute_cycles: int,
+                     op_counts: dict | None = None) -> "AddressTrace":
+        return AddressTrace(self.addrs, self.kinds, self.instr, self.mask,
+                            compute_cycles=compute_cycles,
+                            op_counts=dict(op_counts or {}),
+                            meta=dict(self.meta))
+
+    def __repr__(self) -> str:
+        return (f"AddressTrace(ops={self.n_ops}, "
+                f"instrs={self.n_instructions}, "
+                f"compute_cycles={self.compute_cycles})")
+
+
+class TraceBuilder:
+    """Incremental AddressTrace construction with the ISA's accounting rules:
+    one ``load``/``store`` call = one instruction (one overhead), compute
+    bundles cost ``Σcounts × T/16`` cycles (1 for scalar bundles)."""
+
+    def __init__(self, n_threads: int = LANES):
+        self.n_threads = n_threads
+        self._chunks: list[AddressTrace] = []
+        self._compute_cycles = 0
+        self._op_counts: dict = {}
+
+    def load(self, addrs, space: str = "D", mask=None) -> "TraceBuilder":
+        kind = "tw" if space == "TW" else "load"
+        self._chunks.append(AddressTrace.from_ops(addrs, kind, mask=mask))
+        return self
+
+    def store(self, addrs, mask=None) -> "TraceBuilder":
+        self._chunks.append(AddressTrace.from_ops(addrs, "store", mask=mask))
+        return self
+
+    def compute(self, counts: dict, scalar: bool = False) -> "TraceBuilder":
+        per = 1 if scalar else max(1, self.n_threads // LANES)
+        self._compute_cycles += sum(counts.values()) * per
+        for k, v in counts.items():
+            self._op_counts[k] = self._op_counts.get(k, 0) + v * per
+        return self
+
+    def build(self, meta: dict | None = None) -> AddressTrace:
+        t = AddressTrace.concat(*self._chunks)
+        t = t.with_compute(self._compute_cycles, self._op_counts)
+        if meta:
+            t.meta.update(meta)
+        return t

@@ -21,7 +21,7 @@ Thread blocks are capped at 1024 threads (paper; a 64×64 transpose runs as
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Sequence
+from typing import Callable
 
 import numpy as np
 
@@ -111,6 +111,12 @@ class Program:
                 cyc += n * (1 if i.scalar else _cycles_per_instr(self.n_threads))
         return cyc
 
+    def address_trace(self):
+        """The program's first-class ``AddressTrace`` (repro.core.trace) —
+        the artifact ``MemoryArchitecture.cost`` consumes."""
+        from repro.core.trace import AddressTrace
+        return AddressTrace.from_program(self)
+
     def mem_traces(self) -> tuple[list, list, list]:
         """(load, store, tw) lists of (ops, LANES) address matrices."""
         loads, stores, tws = [], [], []
@@ -137,12 +143,8 @@ def to_ops(addrs: np.ndarray) -> np.ndarray:
 
     Multi-word instructions issue word 0 for all threads, then word 1, ... —
     each word is its own sequence of 16-lane operations (C-order reshape).
+    Delegates to ``repro.core.trace.as_ops`` (the AddressTrace schema owns
+    the op-grouping rule since the cost-API redesign).
     """
-    addrs = np.asarray(addrs, np.int32).reshape(-1)
-    t = addrs.shape[0]
-    pad = (-t) % LANES
-    if pad:
-        # replicate the final address into idle lanes (idle lanes re-request
-        # the same bank in hardware; negligible for the paper's aligned sizes)
-        addrs = np.concatenate([addrs, np.repeat(addrs[-1], pad)])
-    return addrs.reshape(-1, LANES)
+    from repro.core.trace import as_ops
+    return as_ops(addrs)

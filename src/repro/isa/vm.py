@@ -3,22 +3,25 @@ any memory architecture (banked or multi-port).
 
 Functional state: a flat float32 word memory (``repro.core.memsim.Memory``)
 plus a per-thread register file (numpy, vectorized over threads).  Timing:
-every memory instruction's (ops × 16) address matrix is costed by
-``memsim.instruction_cycles``; ALU bundles cost ``counts × T/16`` cycles.
+the program is first lowered to the **same first-class ``AddressTrace``**
+the kernel registry's ``trace`` generators emit
+(``AddressTrace.from_program``), then costed in one shot by
+``MemoryArchitecture.cost`` — so kernel-derived and VM-derived cycle counts
+share a single timing path and cross-validate on the Table II/III programs.
 
-``run_program`` returns both the final memory (for oracle checks) and a
-``TraceCost`` identical in structure to the rows of Tables II/III.
+``run_program`` returns the final memory (for oracle checks), the trace it
+costed, and a ``TraceCost`` identical in structure to the rows of
+Tables II/III.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.memsim import (LANES, Memory, MemSpec, TraceCost,
-                               instruction_cycles)
-from repro.isa.assembler import Compute, MemLoad, MemStore, Program, to_ops
+from repro.core.memsim import MemSpec, TraceCost
+from repro.core.trace import AddressTrace
+from repro.isa.assembler import Compute, MemLoad, MemStore, Program
 
 
 @dataclass
@@ -27,6 +30,7 @@ class VMResult:
     regs: dict                # final register file
     cost: TraceCost
     fmax_mhz: float
+    trace: AddressTrace | None = None   # the costed address trace
 
     @property
     def total_cycles(self) -> int:
@@ -37,6 +41,12 @@ class VMResult:
         return self.cost.time_us(self.fmax_mhz)
 
 
+def program_trace(program: Program) -> AddressTrace:
+    """Lower a macro-op program to its AddressTrace (pure function of the
+    program; cost it under any architecture with ``arch.cost``)."""
+    return AddressTrace.from_program(program)
+
+
 def run_program(program: Program, spec: MemSpec, init_memory: np.ndarray,
                 execute: bool = True) -> VMResult:
     """Run (and/or cost) a program against one memory architecture.
@@ -44,32 +54,22 @@ def run_program(program: Program, spec: MemSpec, init_memory: np.ndarray,
     execute=False skips the functional part (timing only) — used when costing
     the same trace under many architectures.
     """
+    from repro.core import arch as _arch
+
+    trace = program_trace(program)
+    cost = _arch.from_spec(spec).cost(trace)
+
     mem = np.array(init_memory, np.float32, copy=True)
     regs: dict = {}
-    cost = TraceCost()
-
-    for instr in program.instrs:
-        if isinstance(instr, MemLoad):
-            ops = to_ops(instr.addrs)
-            cyc = instruction_cycles(spec, jnp.asarray(ops), is_write=False)
-            if instr.space == "TW":
-                cost.tw_load_cycles += cyc
-                cost.n_tw_ops += ops.shape[0]
-            else:
-                cost.load_cycles += cyc
-                cost.n_load_ops += ops.shape[0]
-            if execute:
+    if execute:
+        for instr in program.instrs:
+            if isinstance(instr, MemLoad):
                 if isinstance(instr.reg, tuple):
                     for i, r in enumerate(instr.reg):
                         regs[r] = mem[np.asarray(instr.addrs[i], np.int64)]
                 else:
                     regs[instr.reg] = mem[np.asarray(instr.addrs, np.int64)]
-        elif isinstance(instr, MemStore):
-            ops = to_ops(instr.addrs)
-            cyc = instruction_cycles(spec, jnp.asarray(ops), is_write=True)
-            cost.store_cycles += cyc
-            cost.n_store_ops += ops.shape[0]
-            if execute:
+            elif isinstance(instr, MemStore):
                 if isinstance(instr.reg, tuple):
                     for i, r in enumerate(instr.reg):
                         mem[np.asarray(instr.addrs[i], np.int64)] = np.asarray(
@@ -77,24 +77,17 @@ def run_program(program: Program, spec: MemSpec, init_memory: np.ndarray,
                 else:
                     mem[np.asarray(instr.addrs, np.int64)] = np.asarray(
                         regs[instr.reg], np.float32)
-        elif isinstance(instr, Compute):
-            per = 1 if instr.scalar else max(1, program.n_threads // LANES)
-            cost.compute_cycles += sum(instr.counts.values()) * per
-            for k, v in instr.counts.items():
-                # buckets accumulate CYCLES (Table II/III 'Common Ops' units)
-                setattr(cost, f"{k}_ops", getattr(cost, f"{k}_ops") + v * per)
-            if execute and instr.fn is not None:
-                regs = instr.fn(regs)
-        else:  # pragma: no cover
-            raise TypeError(f"unknown instruction {instr!r}")
+            elif isinstance(instr, Compute):
+                if instr.fn is not None:
+                    regs = instr.fn(regs)
+            else:  # pragma: no cover
+                raise TypeError(f"unknown instruction {instr!r}")
 
-    return VMResult(memory=mem, regs=regs, cost=cost, fmax_mhz=spec.fmax_mhz)
+    return VMResult(memory=mem, regs=regs, cost=cost, fmax_mhz=spec.fmax_mhz,
+                    trace=trace)
 
 
 def cost_only(program: Program, spec: MemSpec) -> TraceCost:
     """Timing-only pass (no functional execution, no memory needed)."""
-    n_words = 1 + max(
-        [int(np.max(i.addrs)) for i in program.instrs
-         if isinstance(i, (MemLoad, MemStore))] or [0])
-    return run_program(program, spec, np.zeros(n_words, np.float32),
-                       execute=False).cost
+    from repro.core import arch as _arch
+    return _arch.from_spec(spec).cost(program_trace(program))

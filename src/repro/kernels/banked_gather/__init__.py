@@ -1,7 +1,9 @@
-from repro.kernels.banked_gather.ops import (banked_gather, to_banked_layout,
+from repro.kernels.banked_gather.ops import (banked_gather,
+                                             banked_gather_trace,
+                                             to_banked_layout,
                                              from_banked_layout)
 from repro.kernels.banked_gather.ref import banked_gather_ref
-from repro.kernels.registry import Kernel, register, row_stream_cost
+from repro.kernels.registry import Kernel, register
 
 
 def _run(arch, table, idx, *, interpret=True):
@@ -18,8 +20,7 @@ register(Kernel(
     name="banked_gather",
     pallas=_run,
     ref=lambda arch, table, idx, **_: banked_gather_ref(table, idx),
-    cost=lambda arch, table, idx, **_: row_stream_cost(arch, idx,
-                                                       is_write=False),
+    trace=banked_gather_trace,
     description="bank-major row gather (embedding / paged KV read path)",
 ))
 

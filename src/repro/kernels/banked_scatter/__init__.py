@@ -1,6 +1,7 @@
-from repro.kernels.banked_scatter.ops import banked_scatter
+from repro.kernels.banked_scatter.ops import (banked_scatter,
+                                              banked_scatter_trace)
 from repro.kernels.banked_scatter.ref import banked_scatter_ref
-from repro.kernels.registry import Kernel, register, row_stream_cost
+from repro.kernels.registry import Kernel, register
 
 
 def _run(arch, table, idx, updates, *, interpret=True):
@@ -19,8 +20,7 @@ register(Kernel(
     pallas=_run,
     ref=lambda arch, table, idx, updates, **_: banked_scatter_ref(
         table, idx, updates),
-    cost=lambda arch, table, idx, updates, **_: row_stream_cost(
-        arch, idx, is_write=True),
+    trace=banked_scatter_trace,
     description="bank-major row scatter (paged KV write path)",
 ))
 

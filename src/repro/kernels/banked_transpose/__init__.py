@@ -1,26 +1,13 @@
-from repro.kernels.banked_transpose.ops import banked_transpose
+from repro.kernels.banked_transpose.ops import (banked_transpose,
+                                                banked_transpose_trace)
 from repro.kernels.banked_transpose.ref import banked_transpose_ref
 from repro.kernels.registry import Kernel, register
-
-
-def _cost(arch, x, **_):
-    """Cycle cost of the paper's N×N transpose benchmark under ``arch``
-    (the Table II workload; needs a square power-of-two matrix)."""
-    n, m = x.shape
-    if n != m or n < 16 or n & (n - 1):
-        raise NotImplementedError(
-            f"transpose cost model needs square power-of-two N>=16, got "
-            f"{(n, m)}")
-    from repro.isa.programs.transpose import transpose_program
-    return arch.run_program(transpose_program(n),
-                            execute=False).cost.total_cycles
-
 
 register(Kernel(
     name="banked_transpose",
     pallas=lambda arch, x, **kw: banked_transpose(x, **kw),
     ref=lambda arch, x, **_: banked_transpose_ref(x),
-    cost=_cost,
+    trace=banked_transpose_trace,
     description="VMEM-tiled matrix transpose (paper Table II workload)",
 ))
 

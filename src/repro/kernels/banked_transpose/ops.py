@@ -8,6 +8,20 @@ import jax.numpy as jnp
 from repro.kernels.banked_transpose.kernel import banked_transpose_kernel
 
 
+def banked_transpose_trace(arch, x, **_):
+    """Exact AddressTrace of the paper's N×N transpose benchmark (the Table
+    II workload): the per-lane load/store address streams of the SIMT
+    program, not a row-stream proxy.  Needs a square power-of-two N ≥ 16."""
+    n, m = x.shape
+    if n != m or n < 16 or n & (n - 1):
+        raise NotImplementedError(
+            f"transpose trace model needs square power-of-two N>=16, got "
+            f"{(n, m)}")
+    from repro.core.trace import AddressTrace
+    from repro.isa.programs.transpose import transpose_program
+    return AddressTrace.from_program(transpose_program(n))
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def banked_transpose(x: jnp.ndarray, tile: int = 128,
                      interpret: bool = True) -> jnp.ndarray:

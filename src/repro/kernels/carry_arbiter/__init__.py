@@ -1,4 +1,5 @@
-from repro.kernels.carry_arbiter.ops import carry_arbiter
+from repro.kernels.carry_arbiter.ops import (carry_arbiter,
+                                             carry_arbiter_trace)
 from repro.kernels.carry_arbiter.ref import carry_arbiter_ref
 from repro.kernels.registry import Kernel, register
 
@@ -6,6 +7,7 @@ register(Kernel(
     name="carry_arbiter",
     pallas=lambda arch, requests, **kw: carry_arbiter(requests, **kw),
     ref=lambda arch, requests, **_: carry_arbiter_ref(requests),
+    trace=carry_arbiter_trace,
     description="carry-chain arbiter grant-schedule generator (paper Fig 4)",
 ))
 

@@ -8,6 +8,22 @@ import jax.numpy as jnp
 from repro.kernels.carry_arbiter.kernel import carry_arbiter_kernel
 
 
+def carry_arbiter_trace(arch, requests, **_):
+    """The lane→bank stream implied by packed request words: op o's lane l
+    addresses the bank whose bit l is set in ``requests[o]`` (lanes with no
+    request are masked off).  Costing this trace under a B-bank architecture
+    reproduces the arbiter's own grant-cycle count."""
+    import numpy as np
+
+    from repro.core.memsim import LANES
+    from repro.core.trace import AddressTrace
+    req = np.asarray(requests, np.uint32)
+    bits = (req[:, None, :] >> np.arange(LANES, dtype=np.uint32)[None, :,
+                                         None]) & 1      # (ops, LANES, B)
+    return AddressTrace.from_ops(bits.argmax(axis=-1), kind="load",
+                                 mask=bits.any(axis=-1))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def carry_arbiter(requests: jnp.ndarray, interpret: bool = True):
     """(ops, B) packed uint32 lane-request words -> (ops, 16, B) one-hot

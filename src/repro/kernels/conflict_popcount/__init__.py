@@ -1,4 +1,5 @@
-from repro.kernels.conflict_popcount.ops import conflict_popcount
+from repro.kernels.conflict_popcount.ops import (conflict_popcount,
+                                                 conflict_popcount_trace)
 from repro.kernels.conflict_popcount.ref import conflict_popcount_ref
 from repro.kernels.registry import Kernel, register
 
@@ -21,6 +22,7 @@ register(Kernel(
         banks, _n_banks(arch, n_banks), **kw),
     ref=lambda arch, banks, n_banks=None, **_: conflict_popcount_ref(
         banks, _n_banks(arch, n_banks)),
+    trace=conflict_popcount_trace,
     description="issue-controller conflict counting (one-hot popcount + max)",
 ))
 

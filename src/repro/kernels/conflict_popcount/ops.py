@@ -8,6 +8,14 @@ import jax.numpy as jnp
 from repro.kernels.conflict_popcount.kernel import conflict_popcount_kernel
 
 
+def conflict_popcount_trace(arch, banks, n_banks=None, **_):
+    """The (ops, 16) lane bank-id matrix as an AddressTrace: bank ids double
+    as word addresses (id < n_banks, so the LSB map is the identity), making
+    ``arch.cost`` reproduce the controller's own max-popcount cycles."""
+    from repro.core.trace import AddressTrace
+    return AddressTrace.from_ops(banks, kind="load")
+
+
 @functools.partial(jax.jit, static_argnames=("n_banks", "interpret"))
 def conflict_popcount(banks: jnp.ndarray, n_banks: int = 16,
                       interpret: bool = True):

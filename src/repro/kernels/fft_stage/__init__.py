@@ -1,4 +1,5 @@
-from repro.kernels.fft_stage.ops import fft4096_radix4, fft_stage_radix4
+from repro.kernels.fft_stage.ops import (fft4096_radix4, fft_stage_radix4,
+                                         fft_trace)
 from repro.kernels.fft_stage.ref import fft_oracle_digit_reversed
 from repro.kernels.registry import Kernel, register
 
@@ -11,22 +12,11 @@ def _ref(arch, x, **_):
     return out.reshape(x.shape)
 
 
-def _cost(arch, x, **_):
-    """Cycle cost of the paper's radix-4 FFT benchmark under ``arch``."""
-    from repro.isa.programs.fft import fft_program
-    n = x.shape[-1]
-    try:
-        prog = fft_program(n, 4)
-    except ValueError as e:
-        raise NotImplementedError(str(e)) from None
-    return arch.run_program(prog, execute=False).cost.total_cycles
-
-
 register(Kernel(
     name="fft_stage",
     pallas=lambda arch, x, **kw: fft4096_radix4(x, n=x.shape[-1], **kw),
     ref=_ref,
-    cost=_cost,
+    trace=fft_trace,
     description="radix-4 DIF FFT stages (paper Table III workload)",
 ))
 

@@ -36,6 +36,19 @@ def fft_stage_radix4(xr: jnp.ndarray, xi: jnp.ndarray, n: int, p: int,
     return yr.reshape(batch, n), yi.reshape(batch, n)
 
 
+def fft_trace(arch, x, **_):
+    """Exact AddressTrace of the paper's radix-4 FFT benchmark on ``x``'s
+    last axis (Table III): the two-word I/Q load, twiddle-load, and store
+    streams of every DIF pass, per lane."""
+    from repro.core.trace import AddressTrace
+    from repro.isa.programs.fft import fft_program
+    try:
+        prog = fft_program(x.shape[-1], 4)
+    except ValueError as e:
+        raise NotImplementedError(str(e)) from None
+    return AddressTrace.from_program(prog)
+
+
 def fft4096_radix4(x: jnp.ndarray, n: int = 4096,
                    interpret: bool = True) -> jnp.ndarray:
     """(batch, n) complex64 -> FFT in digit-reversed order (batch, n)."""

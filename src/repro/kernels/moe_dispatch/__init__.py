@@ -1,6 +1,7 @@
-from repro.kernels.moe_dispatch.ops import moe_dispatch_positions
+from repro.kernels.moe_dispatch.ops import (moe_dispatch_positions,
+                                            moe_dispatch_trace)
 from repro.kernels.moe_dispatch.ref import moe_dispatch_ref
-from repro.kernels.registry import Kernel, register, row_stream_cost
+from repro.kernels.registry import Kernel, register
 
 register(Kernel(
     name="moe_dispatch",
@@ -8,9 +9,7 @@ register(Kernel(
         moe_dispatch_positions(experts, n_experts, capacity, **kw),
     ref=lambda arch, experts, n_experts, capacity, **_:
         moe_dispatch_ref(experts, n_experts, capacity),
-    # arbiter occupancy when experts play the role of banks (write side)
-    cost=lambda arch, experts, n_experts, capacity, **_:
-        row_stream_cost(arch, experts, is_write=True),
+    trace=moe_dispatch_trace,
     description="running-count MoE token dispatch (arbiter math at scale)",
 ))
 

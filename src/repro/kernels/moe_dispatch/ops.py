@@ -8,6 +8,14 @@ import jax.numpy as jnp
 from repro.kernels.moe_dispatch.kernel import moe_dispatch_kernel
 
 
+def moe_dispatch_trace(arch, experts, n_experts, capacity, **_):
+    """The dispatch's AddressTrace: the priority-ordered expert-id stream as
+    one store instruction (experts play the role of banks — the arbiter's
+    write-side occupancy at MoE scale)."""
+    from repro.kernels.registry import row_stream_trace
+    return row_stream_trace(experts, kind="store")
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_experts", "capacity", "interpret"))
 def moe_dispatch_positions(experts: jnp.ndarray, n_experts: int,

@@ -8,18 +8,23 @@ ships, behind one common signature whose first argument is a
     inputs (bank-major relayout, where needed, is derived from
     ``arch.layout`` internally);
   * ``ref(arch, *args)``    — the pure-jnp oracle;
-  * ``cost(arch, *args)``   — cycles the operation costs under ``arch``'s
-    conflict/cycle model (optional; raises NotImplementedError when a
-    kernel has no meaningful address trace).
+  * ``trace(arch, *args)``  — the kernel's exact ``AddressTrace``
+    (repro.core.trace): the request stream this call puts on the shared
+    memory.  ``arch.cost(trace)`` is the timing model; ``cost_cycles`` is
+    the one-call convenience over both.  Optional — raises
+    NotImplementedError when a kernel has no meaningful address stream.
 
 Usage::
 
     from repro import kernels
-    out = kernels.get("banked_gather").run(arch.get("16B-offset"), table, idx)
+    k = kernels.get("banked_gather")
+    out = k.run(arch.get("16B-offset"), table, idx)
+    t = k.address_trace("16B-offset", table, idx)     # first-class artifact
+    cyc = arch.get("4B").cost(t).total_cycles         # cost anywhere
 
 New kernels are one decorator away::
 
-    @register_kernel("my_kernel", ref=my_ref)
+    @register_kernel("my_kernel", ref=my_ref, trace=my_trace)
     def my_pallas(arch, x):
         ...
 """
@@ -37,7 +42,8 @@ class Kernel:
     name: str
     pallas: Callable
     ref: Callable
-    cost: Callable | None = None
+    trace: Callable | None = None    # (arch, *args) -> AddressTrace
+    cost: Callable | None = None     # legacy opaque override; prefer trace
     description: str = ""
 
     def run(self, arch, *args, **kwargs):
@@ -48,12 +54,23 @@ class Kernel:
         """Run the pure-jnp oracle (same signature as ``run``)."""
         return self.ref(_arch.resolve(arch), *args, **kwargs)
 
-    def cost_cycles(self, arch, *args, **kwargs):
-        """Cycles this operation costs under ``arch``'s timing model."""
-        if self.cost is None:
+    def address_trace(self, arch, *args, **kwargs):
+        """The exact AddressTrace this call issues (see repro.core.trace)."""
+        if self.trace is None:
             raise NotImplementedError(
-                f"kernel {self.name!r} has no cost model")
-        return self.cost(_arch.resolve(arch), *args, **kwargs)
+                f"kernel {self.name!r} has no address-trace generator")
+        return self.trace(_arch.resolve(arch), *args, **kwargs)
+
+    def cost_cycles(self, arch, *args, **kwargs):
+        """Cycles this operation costs under ``arch``'s timing model
+        (= ``arch.cost(self.trace(arch, *args)).total_cycles``)."""
+        a = _arch.resolve(arch)
+        if self.trace is not None:
+            return a.cost(self.trace(a, *args, **kwargs)).total_cycles
+        if self.cost is not None:       # pre-redesign opaque cost callable
+            return self.cost(a, *args, **kwargs)
+        raise NotImplementedError(
+            f"kernel {self.name!r} has no cost model")
 
 
 _KERNELS: dict[str, Kernel] = {}
@@ -73,13 +90,14 @@ def register(kernel: Kernel) -> Kernel:
 
 
 def register_kernel(name: str, *, ref: Callable,
+                    trace: Callable | None = None,
                     cost: Callable | None = None,
                     description: str = "") -> Callable:
     """Decorator form: registers the decorated function as the Pallas entry
     point of a new Kernel and returns the Kernel."""
     def deco(pallas: Callable) -> Kernel:
-        return register(Kernel(name=name, pallas=pallas, ref=ref, cost=cost,
-                               description=description))
+        return register(Kernel(name=name, pallas=pallas, ref=ref, trace=trace,
+                               cost=cost, description=description))
     return deco
 
 
@@ -106,18 +124,21 @@ def names() -> tuple[str, ...]:
 
 
 # --------------------------------------------------------------------------
-# Shared cost helpers (kernels whose address trace is their index stream)
+# Shared trace helpers (kernels whose address trace is their index stream)
 # --------------------------------------------------------------------------
 
-def row_stream_cost(arch, idx, is_write: bool) -> int:
-    """Cost a row-index request stream: LANES indices per operation, costed
-    as word addresses under the architecture's conflict model."""
-    import jax.numpy as jnp
+def row_stream_trace(idx, kind: str = "load"):
+    """A row-index request stream as a one-instruction AddressTrace: LANES
+    indices per operation, interpreted as word addresses (rows are the
+    banked unit, so the row stream IS the exact address stream)."""
+    import numpy as np
 
-    from repro.core.memsim import LANES
-    idx = jnp.asarray(idx, jnp.int32).reshape(-1)
-    pad = (-idx.shape[0]) % LANES
-    if pad:
-        # replicate the last request to fill the trailing op (worst-case-safe)
-        idx = jnp.concatenate([idx, jnp.broadcast_to(idx[-1:], (pad,))])
-    return arch.instruction_cycles(idx.reshape(-1, LANES), is_write=is_write)
+    from repro.core.trace import AddressTrace
+    return AddressTrace.from_stream(np.asarray(idx), kind=kind)
+
+
+def row_stream_cost(arch, idx, is_write: bool) -> int:
+    """Legacy shim: cost a row-index request stream under ``arch``
+    (= ``arch.cost(row_stream_trace(idx, ...)).total_cycles``)."""
+    kind = "store" if is_write else "load"
+    return arch.cost(row_stream_trace(idx, kind)).total_cycles

@@ -70,15 +70,18 @@ def _load_balance_loss(probs: Array, top_e: Array, n_experts: int) -> Array:
 def arbiter_positions(top_e: Array, n_experts: int) -> Array:
     """Grant slots for (G, S, k) requests in GShard/arbiter priority order.
 
-    Flattens to (G, k·S) with all 1st choices before 2nd choices, applies the
-    exclusive-cumsum grant order (== the paper's carry-chain arbiter), and
-    restores (G, S, k).
+    Flattens to (G, k·S) with all 1st choices before 2nd choices and
+    dispatches through the registered ``moe_dispatch`` kernel's reference
+    path (``kernels.get("moe_dispatch")`` — the carry-chain arbiter's
+    exclusive-cumsum grant order, vectorized over groups), then restores
+    (G, S, k).  The capacity budget is applied by the *caller* (``pos <
+    cap``), so the dispatch runs uncapped here.
     """
+    from repro.kernels import registry as _kernels
     g, s, k = top_e.shape
     req = jnp.transpose(top_e, (0, 2, 1)).reshape(g, k * s)  # (G, k*S)
-    onehot = jax.nn.one_hot(req, n_experts, dtype=jnp.int32)
-    pos = jnp.cumsum(onehot, axis=1) - onehot                # exclusive
-    pos = jnp.take_along_axis(pos, req[..., None], axis=-1)[..., 0]
+    pos, _ = _kernels.get("moe_dispatch").ref(
+        None, req, n_experts, capacity=k * s)                # uncapped
     return jnp.transpose(pos.reshape(g, k, s), (0, 2, 1))    # (G, S, k)
 
 

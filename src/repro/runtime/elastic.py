@@ -14,8 +14,7 @@ import math
 import jax
 
 from repro.checkpoint.checkpoint import latest_step, restore_checkpoint
-from repro.launch.sharding import Axes, make_axes
-from repro.models.params import shape_tree, spec_tree
+from repro.launch.mesh import compat_make_mesh
 
 
 def _largest_pow2_factor(n: int) -> int:
@@ -37,9 +36,7 @@ def make_current_mesh(prefer_model: int = 0):
         while model * 2 <= math.isqrt(n) and n % (model * 2) == 0:
             model *= 2
     data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def elastic_restore(ckpt_dir: str, template_state):

@@ -10,13 +10,13 @@ dry-run's serve_step lowering.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
+from repro.core import arch as _arch
 from repro.launch.sharding import Axes
 from repro.models import transformer as T
 
@@ -30,15 +30,39 @@ class GenerationResult:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, rc: RunConfig, params, ax: Axes,
-                 max_batch: int = 8, max_seq: int = 256):
+                 max_batch: int = 8, max_seq: int = 256,
+                 mem_arch="16B"):
         self.cfg, self.rc, self.ax = cfg, rc, ax
         self.params = params
         self.max_batch, self.max_seq = max_batch, max_seq
+        #: the shared-memory architecture serving-side layout decisions come
+        #: from (KV page banking; see ``paged_kv_config``)
+        self.mem_arch = _arch.resolve(mem_arch)
         self._prefill = jax.jit(
             lambda p, t: T.prefill(cfg, rc, p, t, ax))
         self._decode = jax.jit(
             lambda p, tok, cache, pos: T.decode_step(cfg, rc, p, tok, cache,
                                                      pos, ax))
+
+    def paged_kv_config(self, page_len: int = 16):
+        """Banked paged-KV pool layout for this engine's batch/seq budget,
+        derived from ``mem_arch`` via ``repro.core.arch`` (bank count and
+        page→bank map come from the architecture's ``BankedLayout``, not
+        serving-local constants).  Pool is sized 2× the worst-case live
+        pages, rounded up to a whole number of banks."""
+        from repro.serving.kvcache import PagedKVConfig
+        lay = self.mem_arch.layout
+        if lay is None:
+            raise ValueError(
+                f"{self.mem_arch.name} has no banked layout; pick a banked "
+                f"mem_arch for paged-KV serving")
+        pages_per_seq = -(-self.max_seq // page_len)
+        n_pages = 2 * self.max_batch * pages_per_seq
+        n_pages = -(-n_pages // lay.n_banks) * lay.n_banks
+        kv_heads = self.cfg.n_kv_heads or self.cfg.n_heads
+        return PagedKVConfig.from_arch(
+            self.mem_arch, n_pages=n_pages, page_len=page_len,
+            kv_heads=kv_heads, head_dim=self.cfg.hd)
 
     def _pad_cache(self, cache, prompt_len: int):
         """Grow prefill caches (len = prompt) to the decode buffer (max_seq).

@@ -20,12 +20,9 @@ with the Pallas kernel as the TPU hot path.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.bankmap import bank_of
 from repro.core.conflicts import bank_counts
 from repro.core.arbiter import grant_positions
 
@@ -40,6 +37,32 @@ class PagedKVConfig:
     mapping: str = "lsb"
     kv_heads: int = 8
     head_dim: int = 128
+    map_shift: int = 2      # offset-map bank-bit position (bankmap default)
+
+    @classmethod
+    def from_arch(cls, arch, n_pages: int, page_len: int,
+                  kv_heads: int = 8, head_dim: int = 128) -> "PagedKVConfig":
+        """Derive the page-pool banking from a ``MemoryArchitecture`` (name,
+        spec, or object) — the serving-side layout decision comes from
+        ``repro.core.arch``, not local constants."""
+        from repro.core import arch as _arch
+        a = _arch.resolve(arch)
+        lay = a.layout
+        if lay is None:
+            raise ValueError(
+                f"{a.name} has no banked layout to derive a KV page map "
+                f"from; use a banked architecture (e.g. '16B-offset')")
+        return cls(n_pages=n_pages, page_len=page_len, n_banks=lay.n_banks,
+                   mapping=lay.mapping, kv_heads=kv_heads, head_dim=head_dim,
+                   map_shift=lay.shift)
+
+    @property
+    def layout(self):
+        """The ``BankedLayout`` this pool implements (single source of truth
+        for page→(bank, slot) math, shared with the FPGA simulator and the
+        Pallas kernels)."""
+        from repro.core.arch import BankedLayout
+        return BankedLayout(self.n_banks, self.mapping, self.map_shift)
 
     @property
     def pages_per_bank(self) -> int:
@@ -89,7 +112,7 @@ def allocate_pages(cfg: PagedKVConfig, state: PagedKVState,
     b = need.shape[0]
     cap = cfg.pages_per_bank
     logical = state.seq_lens // cfg.page_len            # next logical page
-    pref_bank = bank_of(logical, cfg.n_banks, cfg.mapping)
+    pref_bank, _ = cfg.layout.bank_slot(logical)        # arch's bank map
     need_i = need.astype(jnp.int32)
 
     # phase 1: arbiter grants at the preferred bank

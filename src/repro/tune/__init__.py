@@ -1,0 +1,11 @@
+"""Architecture autotuning — layer 4 of the public API.
+
+``tune.search(kernel, workload, space, strategy=...)`` sweeps bank count ×
+bank map × broadcast (plus the multi-port family) over one workload's
+``AddressTrace`` and returns ranked ``TuneResult``s.  See search.py.
+"""
+from repro.tune.search import (EXTENDED_SPACE, PAPER_SPACE, ArchSpace,
+                               TuneResult, search)
+
+__all__ = ["ArchSpace", "TuneResult", "search", "PAPER_SPACE",
+           "EXTENDED_SPACE"]

@@ -1,0 +1,196 @@
+"""Architecture autotuner — layer 4 of the public API (see README.md).
+
+``search`` sweeps the memory-architecture space (bank count × bank map ×
+broadcast, plus the multi-port family) for the cheapest architecture on one
+workload, costing first-class ``AddressTrace``s through the same
+``MemoryArchitecture.cost`` path as the benchmark sweep and the ISA VM.
+
+Workloads come in two forms:
+
+  * a ``repro.bench.Workload`` (an ISA program, e.g. the paper's
+    transpose/FFT builders) — costed via ``bench.run_cell``;
+  * ``(kernel, args)``: any registry kernel with a ``trace`` generator plus
+    its call arguments — costed via ``arch.cost(kernel.trace(arch, *args))``.
+
+Strategies:
+
+  * ``"exhaustive"`` — cost every point of the space (the paper's own
+    methodology: all 9 memories × every benchmark);
+  * ``"hillclimb"``  — greedy walk of the banked lattice (bank count
+    doubling/halving, bank-map switch, broadcast toggle) from a deterministic
+    start, with the (≤3) multi-port points always evaluated outright.  Finds
+    the same winners on the paper workloads in a fraction of the
+    evaluations; every evaluated point is returned, ranked.
+
+Objectives: ``"time_us"`` (default; fmax-aware — the paper's Tables rank on
+time, which is why 600 MHz 4R-2W can win with more cycles), ``"cycles"``,
+``"area_time"`` (Fig 9 cost×performance; needs ``capacity_kb``), or any
+callable ``(record, arch) -> float`` (lower is better).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.bench.runner import Workload, run_cell
+from repro.core import arch as _arch
+
+
+@dataclass(frozen=True)
+class ArchSpace:
+    """The searchable architecture grid.  ``banks``/``mappings``/``broadcast``
+    span the banked lattice; ``multiports`` are standalone points."""
+    banks: tuple = (4, 8, 16)
+    mappings: tuple = ("lsb", "offset")
+    broadcast: tuple = (False,)
+    multiports: tuple = ("4R-1W", "4R-2W", "4R-1W-VB")
+
+    @staticmethod
+    def banked_name(banks: int, mapping: str, bcast: bool) -> str:
+        name = f"{banks}B" + ("" if mapping == "lsb" else f"-{mapping}")
+        return name + ("-bcast" if bcast else "")
+
+    def banked_points(self) -> list:
+        return [(b, m, bc) for b in self.banks for m in self.mappings
+                for bc in self.broadcast]
+
+    def names(self) -> list:
+        return ([self.banked_name(*p) for p in self.banked_points()]
+                + list(self.multiports))
+
+    def start_point(self) -> tuple:
+        """Deterministic hillclimb start: middle of the bank grid, first
+        mapping, no broadcast."""
+        banks = sorted(self.banks)
+        return (banks[len(banks) // 2], self.mappings[0], self.broadcast[0])
+
+    def neighbors(self, point: tuple) -> list:
+        """Lattice moves: bank count one step up/down, any other bank map,
+        broadcast toggled.  Deterministic order."""
+        b, m, bc = point
+        banks = sorted(self.banks)
+        i = banks.index(b)
+        out = []
+        if i + 1 < len(banks):
+            out.append((banks[i + 1], m, bc))
+        if i > 0:
+            out.append((banks[i - 1], m, bc))
+        out.extend((b, m2, bc) for m2 in self.mappings if m2 != m)
+        out.extend((b, m, bc2) for bc2 in self.broadcast if bc2 != bc)
+        return out
+
+
+#: the paper's own comparison surface (Tables II/III: 9 architectures)
+PAPER_SPACE = ArchSpace()
+
+#: beyond-paper grid: anti-stride maps, broadcast coalescing, wider banking
+EXTENDED_SPACE = ArchSpace(banks=(4, 8, 16, 32),
+                           mappings=("lsb", "offset", "xor", "fold"),
+                           broadcast=(False, True))
+
+
+@dataclass(frozen=True)
+class TuneResult:
+    """One evaluated architecture, ranked by ``objective`` (lower = better)."""
+    arch: str
+    total_cycles: int
+    time_us: float
+    objective: float
+    record: dict = field(default_factory=dict)
+
+    def __repr__(self) -> str:
+        return (f"TuneResult({self.arch!r}, cycles={self.total_cycles}, "
+                f"time_us={self.time_us:.2f}, objective={self.objective:.4g})")
+
+
+def _objective_fn(objective, capacity_kb):
+    if callable(objective):
+        return objective
+    if objective == "time_us":
+        return lambda rec, a: rec["time_us"]
+    if objective == "cycles":
+        return lambda rec, a: rec["total_cycles"]
+    if objective == "area_time":
+        if capacity_kb is None:
+            raise ValueError("objective='area_time' needs capacity_kb")
+        from repro.core.cost import area_time_score
+        return lambda rec, a: area_time_score(a.spec, capacity_kb,
+                                              rec["time_us"])
+    raise ValueError(f"unknown objective {objective!r}; use 'time_us', "
+                     f"'cycles', 'area_time', or a callable")
+
+
+def _evaluator(kernel, workload):
+    """(kernel, workload) -> name -> tidy record."""
+    if isinstance(workload, Workload):
+        return lambda name: run_cell(name, workload)
+    if kernel is None:
+        raise ValueError("pass a bench.Workload, or a kernel plus its call "
+                         "args as `workload`")
+    if isinstance(kernel, str):
+        from repro.kernels import registry
+        kernel = registry.get(kernel)
+    args = tuple(workload) if isinstance(workload, (tuple, list)) else (
+        workload,)
+    cached = []   # AddressTraces are logical-address streams, architecture-
+    # independent by design — generate once, cost under every point
+
+    def ev(name: str) -> dict:
+        a = _arch.resolve(name)
+        if not cached:
+            cached.append(kernel.address_trace(a, *args))
+        c = a.cost(cached[0])
+        return {"workload": kernel.name, "arch": a.name,
+                "kind": a.spec.kind, "fmax_mhz": a.fmax_mhz,
+                "total_cycles": c.total_cycles,
+                "time_us": c.time_us(a.fmax_mhz)}
+    return ev
+
+
+def search(kernel=None, workload=None, space: ArchSpace | None = None,
+           strategy: str = "exhaustive", objective="time_us",
+           capacity_kb: float | None = None,
+           top_k: int | None = None) -> list:
+    """Find the best memory architecture for one workload.
+
+    Returns every evaluated point as a ``TuneResult`` list ranked best-first
+    (``results[0].arch`` is the winner); ``top_k`` truncates the ranking.
+    """
+    space = space or PAPER_SPACE
+    obj = _objective_fn(objective, capacity_kb)
+    ev = _evaluator(kernel, workload)
+
+    results: dict = {}
+
+    def visit(name: str) -> "TuneResult":
+        if name not in results:
+            rec = ev(name)
+            a = _arch.resolve(name)
+            results[name] = TuneResult(
+                arch=name, total_cycles=int(rec["total_cycles"]),
+                time_us=float(rec["time_us"]),
+                objective=float(obj(rec, a)), record=rec)
+        return results[name]
+
+    if strategy == "exhaustive":
+        for name in space.names():
+            visit(name)
+    elif strategy == "hillclimb":
+        for name in space.multiports:     # few points; always evaluated
+            visit(name)
+        point = space.start_point()
+        best = visit(space.banked_name(*point))
+        while True:
+            moves = [(visit(space.banked_name(*p)), p)
+                     for p in space.neighbors(point)]
+            better = [(r, p) for r, p in moves
+                      if (r.objective, r.arch) < (best.objective, best.arch)]
+            if not better:
+                break
+            best, point = min(better, key=lambda rp: (rp[0].objective,
+                                                      rp[0].arch))
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}; use 'exhaustive' "
+                         f"or 'hillclimb'")
+
+    ranked = sorted(results.values(), key=lambda r: (r.objective, r.arch))
+    return ranked[:top_k] if top_k else ranked

@@ -1,5 +1,4 @@
 """Banked paged-KV cache: allocation arbitration, roundtrip, bank balance."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -72,3 +71,35 @@ def test_property_no_aliasing(batch, steps):
     mapped = pt[pt >= 0]
     assert len(set(mapped.tolist())) == len(mapped)
     assert int(state.bank_used.sum()) == len(mapped)
+
+
+def test_config_from_arch_derives_layout_from_core_arch():
+    """Serving-side layout decisions come from repro.core.arch: the page
+    pool's bank count / map / shift are the architecture's BankedLayout."""
+    from repro.core import arch
+    cfg = PagedKVConfig.from_arch("8B-xor", n_pages=64, page_len=4,
+                                  kv_heads=2, head_dim=4)
+    assert cfg.n_banks == 8 and cfg.mapping == "xor"
+    lay = arch.get("8B-xor").layout
+    r = jnp.arange(64)
+    np.testing.assert_array_equal(np.asarray(cfg.layout.bank_slot(r)[0]),
+                                  np.asarray(lay.bank_slot(r)[0]))
+    # offset maps carry the architecture's calibrated shift (1, not the
+    # bankmap default of 2)
+    off = PagedKVConfig.from_arch("16B-offset", n_pages=64, page_len=4)
+    assert off.map_shift == 1
+    with pytest.raises(ValueError):
+        PagedKVConfig.from_arch("4R-2W", n_pages=64, page_len=4)
+
+
+def test_from_arch_pool_allocates_and_roundtrips():
+    cfg = PagedKVConfig.from_arch("8B", n_pages=64, page_len=4, kv_heads=2,
+                                  head_dim=4)
+    state = init_state(cfg, batch=4, max_seq=16, dtype=jnp.float32)
+    k = jnp.ones((4, 2, 4))
+    for _ in range(6):
+        state = append_token(cfg, state, k, k * 3)
+    got_k, got_v, valid = gather_kv(cfg, state, max_seq=8)
+    np.testing.assert_allclose(np.asarray(got_k[:, :6]), 1.0)
+    np.testing.assert_allclose(np.asarray(got_v[:, :6]), 3.0)
+    np.testing.assert_array_equal(np.asarray(valid[:, :6]), True)

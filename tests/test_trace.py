@@ -1,0 +1,229 @@
+"""First-class AddressTrace API: schema/composition semantics, and the
+acceptance gate of the cost redesign — for every Table II/III (algorithm,
+size, architecture) point, the kernel-side trace costed by ``arch.cost``
+equals the ISA VM's ``run_program`` cycle count exactly."""
+import numpy as np
+import pytest
+
+from repro import kernels
+from repro.core import arch
+from repro.core.arch import PAPER_ARCHITECTURES, TRANSPOSE_ARCHITECTURES
+from repro.core.memsim import LANES
+from repro.core.trace import (KIND_LOAD, KIND_STORE, KIND_TW, AddressTrace,
+                              TraceBuilder, as_ops)
+from repro.isa.vm import cost_only, run_program
+
+TRANSPOSE_SIZES = (32, 64, 128)
+FFT_RADICES = (4, 8, 16)
+
+
+# ------------------------------------------------------------- schema --
+
+def test_from_stream_shapes_and_padding():
+    t = AddressTrace.from_stream(np.arange(20), kind="load")
+    assert t.n_ops == 2 and t.n_instructions == 1
+    assert t.addrs.shape == (2, LANES)
+    assert (t.addrs[1, 4:] == 19).all()          # idle lanes repeat the tail
+    assert (t.kinds == KIND_LOAD).all()
+    assert t.loads().n_ops == 2 and t.stores().n_ops == 0
+
+
+def test_as_ops_matches_assembler_to_ops():
+    from repro.isa.assembler import to_ops
+    for addrs in (np.arange(32), np.arange(20),
+                  np.stack([np.arange(16), 100 + np.arange(16)])):
+        np.testing.assert_array_equal(as_ops(addrs), to_ops(addrs))
+
+
+def test_concat_offsets_instruction_ids():
+    a = AddressTrace.from_stream(np.arange(32), kind="load")
+    b = AddressTrace.from_stream(np.arange(16), kind="store")
+    c = AddressTrace.from_stream(np.arange(16), kind="tw")
+    t = a + b + c
+    assert t.n_ops == 4 and t.n_instructions == 3
+    assert sorted(np.unique(t.instr).tolist()) == [0, 1, 2]
+    assert t.loads().n_ops == 2 and t.stores().n_ops == 1
+    assert t.tw_loads().n_ops == 1
+    # each source instruction pays its overhead exactly once
+    a16 = arch.get("16B")
+    assert (a16.cost(t).total_cycles
+            == a16.cost(a).total_cycles + a16.cost(b).total_cycles
+            + a16.cost(c).total_cycles)
+
+
+def test_concat_renumbers_sparse_instruction_ids():
+    """Sliced/kind-filtered traces carry sparse instruction ids; composing
+    them must still charge one overhead per source instruction."""
+    a = AddressTrace.from_stream(np.arange(16), kind="load")
+    big = a + a + a                              # ids 0, 1, 2
+    z = big[2:3] + big[1:2]                      # sparse ids {2} and {1}
+    assert z.n_instructions == 2
+    a16 = arch.get("16B")
+    assert a16.cost(z).load_cycles == 2 * (1 + 40)   # 2 ops + 2 overheads
+
+
+def test_concat_keeps_compute_only_traces():
+    t = AddressTrace.empty().with_compute(100, {"fp": 100})
+    u = AddressTrace.from_stream(np.arange(16), kind="load")
+    for combined in (t + u, u + t, AddressTrace.concat(t)):
+        assert combined.compute_cycles == 100
+        assert combined.op_counts.get("fp") == 100
+
+
+def test_ragged_stream_mask_pads_inactive():
+    """A ragged (non-multiple-of-16) masked stream pads idle lanes as
+    inactive, not as duplicate active requests."""
+    t = AddressTrace.from_ops(np.zeros(20, np.int64), kind="load",
+                              mask=np.ones(20, bool))
+    assert t.n_ops == 2 and t.mask.sum() == 20
+    a16 = arch.get("16B")
+    assert a16.cost(t).load_cycles == 16 + 4 + 40    # active lanes only
+
+
+def test_broadcast_read_honors_lane_mask():
+    """Predicated-off lanes issue no request under -bcast architectures:
+    they neither cost distinct-address cycles nor shadow later lanes."""
+    addrs = (16 * np.arange(LANES))[None, :]         # all lanes -> bank 0
+    half = np.array([[True] * 8 + [False] * 8])
+    bc = arch.get("16B-bcast")
+    t_full = AddressTrace.from_ops(addrs, kind="load")
+    t_half = AddressTrace.from_ops(addrs, kind="load", mask=half)
+    assert bc.cost(t_full).load_cycles - bc.cost(t_half).load_cycles == 8
+    # an inactive first lane must not coalesce-shadow an active duplicate
+    dup = np.zeros((1, LANES), np.int64)
+    only_last = np.zeros((1, LANES), bool)
+    only_last[0, -1] = True
+    t = AddressTrace.from_ops(dup, kind="load", mask=only_last)
+    assert bc.cost(t).load_cycles == 1 + 40          # one real request
+
+
+def test_slicing_and_kind_views():
+    t = AddressTrace.from_stream(np.arange(64), kind="load")
+    assert t[:2].n_ops == 2
+    with pytest.raises(TypeError):
+        t[0]
+    assert t.n_words == 64
+    assert (t[2:].addrs == t.addrs[2:]).all()
+
+
+def test_builder_compute_accounting():
+    b = TraceBuilder(n_threads=256)              # 16 cycles / vector instr
+    b.load(np.arange(256)).compute({"fp": 3, "int": 2})
+    b.compute({"other": 5}, scalar=True)
+    t = b.build()
+    assert t.compute_cycles == 5 * 16 + 5
+    assert t.op_counts == {"fp": 48, "int": 32, "other": 5}
+    c = arch.get("16B").cost(t)
+    assert c.fp_ops == 48 and c.other_ops == 5
+    assert c.compute_cycles == t.compute_cycles
+
+
+def test_masked_ops_cost_only_active_lanes():
+    addrs = np.zeros((1, LANES), np.int32)       # all lanes -> one bank
+    half = np.array([[True] * 8 + [False] * 8])
+    t_full = AddressTrace.from_ops(addrs, kind="load")
+    t_half = AddressTrace.from_ops(addrs, kind="load", mask=half)
+    a16 = arch.get("16B")
+    assert (a16.cost(t_full).load_cycles - a16.cost(t_half).load_cycles) == 8
+
+
+def test_row_stream_trace_matches_legacy_cost():
+    from repro.kernels.registry import row_stream_cost, row_stream_trace
+    idx = np.arange(100) * 3
+    for name in ("16B", "8B-offset", "4R-1W"):
+        a = arch.get(name)
+        for kind, is_write in (("load", False), ("store", True)):
+            assert (a.cost(row_stream_trace(idx, kind)).total_cycles
+                    == row_stream_cost(a, idx, is_write))
+
+
+# ------------------------------------ kernel-trace vs VM cross-validation --
+
+@pytest.mark.parametrize("n", TRANSPOSE_SIZES)
+def test_transpose_trace_equals_vm_all_architectures(n):
+    """Every Table II cell: the banked_transpose kernel's AddressTrace costed
+    by arch.cost equals the ISA VM's run_program cycles."""
+    x = np.zeros((n, n), np.float32)
+    k = kernels.get("banked_transpose")
+    from repro.isa.programs.transpose import transpose_program
+    prog = transpose_program(n)
+    for a in TRANSPOSE_ARCHITECTURES:
+        got = a.cost(k.address_trace(a, x))
+        want = run_program(prog, a.spec, np.zeros(2 * n * n, np.float32),
+                           execute=False).cost
+        assert got == want, (n, a.name)
+        assert k.cost_cycles(a, x) == want.total_cycles
+
+
+@pytest.mark.parametrize("radix", FFT_RADICES)
+def test_fft_trace_equals_vm_all_architectures(radix):
+    """Every Table III cell: the trace artifact (fft_stage kernel trace for
+    radix 4; the workload program's trace for radices 8/16) costed by
+    arch.cost equals the VM's cycles."""
+    from repro.bench import fft_workload
+    w = fft_workload(4096, radix)
+    if radix == 4:
+        x = np.zeros((1, 4096), np.complex64)
+        trace = kernels.get("fft_stage").address_trace("16B", x)
+    else:
+        trace = w.trace()
+    for a in PAPER_ARCHITECTURES:
+        got = a.cost(trace)
+        want = cost_only(w.program, a.spec)
+        assert got == want, (radix, a.name)
+
+
+def test_vm_result_carries_the_costed_trace():
+    from repro.isa.programs.transpose import transpose_program
+    a = arch.get("16B-offset")
+    res = run_program(transpose_program(32), a.spec,
+                      np.zeros(2048, np.float32), execute=False)
+    assert isinstance(res.trace, AddressTrace)
+    assert a.cost(res.trace) == res.cost
+    # the trace is architecture-independent: recost it elsewhere
+    other = arch.get("4R-2W")
+    assert (other.cost(res.trace).total_cycles
+            == cost_only(transpose_program(32), other.spec).total_cycles)
+
+
+def test_workload_trace_is_cached_and_matches_program():
+    from repro.bench import transpose_workload
+    w = transpose_workload(32)
+    assert w.trace() is w.trace()
+    assert w.trace().n_ops == w.program.address_trace().n_ops
+
+
+# ------------------------------------------------ other kernel traces --
+
+def test_gather_scatter_traces_kinds():
+    table = np.zeros((64, 8), np.float32)
+    idx = np.arange(32)
+    g = kernels.get("banked_gather").address_trace("16B", table, idx)
+    assert (g.kinds == KIND_LOAD).all() and g.n_instructions == 1
+    s = kernels.get("banked_scatter").address_trace(
+        "16B", table, idx, np.zeros((32, 8), np.float32))
+    assert (s.kinds == KIND_STORE).all()
+    assert KIND_TW not in s.kinds
+
+
+def test_conflict_popcount_trace_reproduces_controller_cycles():
+    import jax.numpy as jnp
+    from repro.kernels.conflict_popcount.ref import conflict_popcount_ref
+    banks = np.random.default_rng(0).integers(0, 16, (32, LANES))
+    t = kernels.get("conflict_popcount").address_trace("16B", banks)
+    _, cycles = conflict_popcount_ref(jnp.asarray(banks), 16)
+    a16 = arch.get("16B")
+    assert (a16.cost(t).load_cycles
+            == int(np.asarray(cycles).sum()) + 40)   # + one 16B read overhead
+
+
+def test_carry_arbiter_trace_unpacks_requests():
+    import jax.numpy as jnp
+    from repro.core.arbiter import pack_requests
+    from repro.core.conflicts import bank_onehot
+    banks = np.random.default_rng(1).integers(0, 16, (8, LANES))
+    onehot = bank_onehot(jnp.asarray(banks), 16)          # (ops, lanes, B)
+    reqs = pack_requests(jnp.transpose(onehot, (0, 2, 1)))  # (ops, B)
+    t = kernels.get("carry_arbiter").address_trace("16B", np.asarray(reqs))
+    np.testing.assert_array_equal(t.addrs, banks)
+    assert t.mask.all()                                   # every lane requests
