@@ -18,7 +18,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.paper_data import TABLE2, TABLE3
 from repro import tune
-from repro.bench import fft_workload, transpose_workload
+from repro.bench import fft_workload, serving_workload, transpose_workload
 
 TRANSPOSE_SIZES = (32, 64, 128)
 FFT_RADICES = (4, 8, 16)
@@ -26,6 +26,14 @@ FFT_RADICES = (4, 8, 16)
 #: Table II excludes the VB variant (the paper doesn't run it on transpose)
 TRANSPOSE_SPACE = tune.ArchSpace(multiports=("4R-1W", "4R-2W"))
 FFT_SPACE = tune.PAPER_SPACE
+
+#: serving (paged-KV) has no paper row; the expectation is the paper's
+#: small-dataset conclusion — a multi-port wins raw time (4R-2W while the
+#: store stream dominates, 4R-1W once gathers do and fmax decides; the
+#: area_time flip at KV-cache capacity is pinned in
+#: tests/test_serving_paged.py)
+SERVING_EXPECTED_SMALL = "4R-2W"
+SERVING_EXPECTED_MEDIUM = "4R-1W"
 
 
 def paper_winner(table: dict, time_col: int) -> str:
@@ -35,6 +43,9 @@ def paper_winner(table: dict, time_col: int) -> str:
 def _cases(smoke: bool):
     yield (transpose_workload(32), TRANSPOSE_SPACE,
            paper_winner(TABLE2[32], 3))
+    yield (serving_workload(batch=4, prompt_len=16, decode_steps=8,
+                            page_len=4, n_kv_layers=2), FFT_SPACE,
+           SERVING_EXPECTED_SMALL)
     if smoke:
         return
     for n in TRANSPOSE_SIZES[1:]:
@@ -43,6 +54,9 @@ def _cases(smoke: bool):
     for radix in FFT_RADICES:
         yield (fft_workload(4096, radix), FFT_SPACE,
                paper_winner(TABLE3[radix], 4))
+    yield (serving_workload(batch=8, prompt_len=64, decode_steps=64,
+                            page_len=8, n_kv_layers=2), FFT_SPACE,
+           SERVING_EXPECTED_MEDIUM)
 
 
 def rows(smoke: bool = False):

@@ -1,0 +1,60 @@
+"""Serving benchmark: paged-KV prefill + decode traffic priced on every
+paper memory (the KV cache is the paper's "dataset sizes grow past what
+multi-port replication can afford" regime — docs/SERVING.md).
+
+Each workload is a (batch, context) point of ``bench.serving_workload``:
+the page allocator runs per architecture (its preferred bank follows the
+arch's bank map), the prefill page writes + every decode step lower to one
+``AddressTrace``, and ``arch.cost`` prices it like any Table II/III cell.
+
+CSV: name,us_per_call,derived (cycles | read/write bank efficiency).
+``--smoke`` runs the smallest point only (CI gate).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.bench import serving_workload, sweep
+from repro.core.arch import PAPER_ARCHITECTURES
+
+#: (batch, prompt_len, decode_steps) grid — small / medium / large context
+POINTS = ((4, 32, 32), (8, 64, 64), (16, 128, 128))
+PAGE_LEN = 8
+N_KV_LAYERS = 2
+
+
+def workloads(smoke: bool = False):
+    pts = POINTS[:1] if smoke else POINTS
+    return [serving_workload(batch=b, prompt_len=p, decode_steps=d,
+                             page_len=PAGE_LEN, n_kv_layers=N_KV_LAYERS)
+            for b, p, d in pts]
+
+
+def rows(smoke: bool = False):
+    out = []
+    for rec in sweep(PAPER_ARCHITECTURES, workloads(smoke)):
+        out.append({
+            "name": f"serving_{rec['workload']}_{rec['arch']}",
+            "us_per_call": round(rec["time_us"], 2),
+            "total_cycles": rec["total_cycles"],
+            "load_cycles": rec["load_cycles"],
+            "store_cycles": rec["store_cycles"],
+            "r_bank_eff": rec["r_bank_eff"],
+            "w_bank_eff": rec["w_bank_eff"],
+        })
+    return out
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    for r in rows(smoke="--smoke" in argv):
+        extra = "|".join(f"{k}={v}" for k, v in r.items()
+                         if k not in ("name", "us_per_call"))
+        print(f"{r['name']},{r['us_per_call']},{extra}")
+
+
+if __name__ == "__main__":
+    main()

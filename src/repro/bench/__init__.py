@@ -1,12 +1,17 @@
-"""Declarative benchmark layer — layer 3 of the three-layer public API.
+"""Declarative benchmark layer — layer 3 of the four-layer public API.
 
 ``sweep(archs, workloads)`` costs every (architecture × workload) cell and
 returns tidy records; the paper-table scripts under ``benchmarks/`` are thin
-formatters over it.  See runner.py for the API and workloads.py for the
-paper's transpose/FFT workload builders.
+formatters over it.  Workloads are ISA programs (``Workload`` — the paper's
+transpose/FFT builders) or per-architecture trace lowerings
+(``TraceWorkload`` — paged-KV serving traffic).  See runner.py for the API
+and workloads.py for the builders.
 """
-from repro.bench.runner import Workload, run_cell, sweep, verify_workload
-from repro.bench.workloads import fft_workload, transpose_workload
+from repro.bench.runner import (TraceWorkload, Workload, run_cell, sweep,
+                                verify_workload)
+from repro.bench.workloads import (fft_workload, serving_workload,
+                                   transpose_workload)
 
-__all__ = ["Workload", "run_cell", "sweep", "verify_workload",
-           "fft_workload", "transpose_workload"]
+__all__ = ["Workload", "TraceWorkload", "run_cell", "sweep",
+           "verify_workload", "fft_workload", "transpose_workload",
+           "serving_workload"]

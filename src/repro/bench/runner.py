@@ -51,17 +51,50 @@ class Workload:
         return cached
 
 
+@dataclass(frozen=True)
+class TraceWorkload:
+    """A workload defined directly by its ``AddressTrace`` lowering rather
+    than an ISA program — e.g. paged-KV serving traffic, whose page
+    placement (and therefore address stream) depends on the architecture's
+    bank map, so the trace is re-lowered per sweep cell.
+
+    ``trace_fn(arch) -> AddressTrace``; lowerings are cached per
+    architecture name (one trace serves exhaustive *and* hillclimb visits).
+    """
+    name: str
+    trace_fn: Callable
+    meta: dict = field(default_factory=dict)
+
+    def trace(self, arch):
+        a = _arch.resolve(arch)
+        cache = getattr(self, "_traces", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_traces", cache)
+        if a.name not in cache:
+            cache[a.name] = self.trace_fn(a)
+        return cache[a.name]
+
+
 def _nan_to_blank(x: float) -> float | str:
     return "" if math.isnan(x) else x
 
 
-def run_cell(arch, workload: Workload, execute: bool = False) -> dict:
+def run_cell(arch, workload, execute: bool = False) -> dict:
     """Cost one (architecture, workload) cell; returns a tidy record.
 
     Timing-only cells (the default) cost the workload's cached AddressTrace
-    directly; execute=True additionally runs the program functionally."""
+    directly; execute=True additionally runs the program functionally.
+    ``TraceWorkload`` cells re-lower the trace under the cell's architecture
+    (and cannot execute — there is no program)."""
     a = _arch.resolve(arch)
-    if execute:
+    if isinstance(workload, TraceWorkload):
+        if execute:
+            raise ValueError(
+                f"trace-only workload {workload.name!r} has no program to "
+                f"execute")
+        c = a.cost(workload.trace(a))
+    elif execute:
         c = a.run_program(workload.program, workload.init_memory,
                           execute=True).cost
     else:
@@ -90,7 +123,7 @@ def sweep(archs: Iterable, workloads: Sequence[Workload] | Workload,
           execute: bool = False) -> list[dict]:
     """Cost every (workload × architecture) cell, workload-major (the order
     the paper's tables print in)."""
-    if isinstance(workloads, Workload):
+    if isinstance(workloads, (Workload, TraceWorkload)):
         workloads = [workloads]
     archs = [_arch.resolve(a) for a in archs]
     return [run_cell(a, w, execute=execute)

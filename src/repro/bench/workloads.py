@@ -1,13 +1,17 @@
-"""The paper's workloads as declarative ``Workload`` values.
+"""The paper's workloads as declarative ``Workload`` values, plus the
+serving workload the paged-KV engine opened up.
 
 Table II: N×N matrix transpose (N ∈ {32, 64, 128}); Table III: 4096-point
 Cooley-Tukey FFT (radix ∈ {4, 8, 16}), functionally verified against numpy.
+``serving_workload`` is a ``TraceWorkload``: paged-KV prefill + decode
+traffic lowered per-architecture (the page allocator follows the arch's
+bank map — see docs/SERVING.md).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.bench.runner import Workload
+from repro.bench.runner import TraceWorkload, Workload
 from repro.isa.programs.fft import (fft_program, make_fft_memory,
                                     oracle_spectrum)
 from repro.isa.programs.transpose import oracle as transpose_oracle
@@ -44,3 +48,32 @@ def fft_workload(n: int = 4096, radix: int = 4, seed: int = 0) -> Workload:
     return Workload(name=f"fft{n}r{radix}", program=fft_program(n, radix),
                     init_memory=mem0, oracle=oracle,
                     meta={"n": n, "radix": radix})
+
+
+def serving_workload(batch: int = 4, prompt_len: int = 32,
+                     decode_steps: int = 32, page_len: int = 8,
+                     n_kv_layers: int = 2,
+                     name: str | None = None) -> TraceWorkload:
+    """Paged-KV serving traffic (prefill page writes + ``decode_steps``
+    decode steps) as a sweep/tune workload.
+
+    The trace is re-lowered per architecture: the page allocator places
+    pages per the arch's bank map, so the address stream — and the bank
+    conflicts it causes — are a property of the (architecture, traffic)
+    pair, exactly like the live ``ServeEngine``'s recorded step traces
+    (``repro.serving.simulate_serving_trace`` is the shared lowering).
+    """
+    from repro.serving.kvcache import simulate_serving_trace
+
+    def trace_fn(arch):
+        return simulate_serving_trace(
+            arch, batch=batch, prompt_len=prompt_len,
+            decode_steps=decode_steps, page_len=page_len,
+            n_kv_layers=n_kv_layers)
+
+    return TraceWorkload(
+        name=name or f"serve_b{batch}_p{prompt_len}_d{decode_steps}",
+        trace_fn=trace_fn,
+        meta={"batch": batch, "prompt_len": prompt_len,
+              "decode_steps": decode_steps, "page_len": page_len,
+              "n_kv_layers": n_kv_layers})

@@ -70,6 +70,34 @@ def physical_row_of(r, n_banks: int, rows_per_bank: int,
     return bank * rows_per_bank + slot
 
 
+def logical_row_of(bank, slot, n_banks: int, mapping: str = "lsb",
+                   shift: int = 1):
+    """Inverse of ``bank_slot_of``: the logical row stored at (bank, slot).
+
+    Every supported map is a bijection, so an allocator may pick a free
+    (bank, slot) pair first and then mint the logical row id whose map lands
+    exactly there — this is how the paged-KV pool hands out page ids that
+    the cost model's bank maps (and the Pallas kernels' index maps) agree
+    with (see repro/serving/kvcache.py).
+    """
+    log2b = _log2(n_banks)
+    mask = n_banks - 1
+    if mapping == "offset":
+        low = slot & ((1 << shift) - 1)
+        high = slot >> shift
+        return (high << (log2b + shift)) | (bank << shift) | low
+    if mapping == "lsb":
+        lsb = bank & mask
+    elif mapping == "xor":
+        lsb = (bank ^ slot) & mask
+    elif mapping == "fold":
+        lsb = (bank - slot) & mask
+    else:
+        raise ValueError(
+            f"unknown bank map {mapping!r}; choose from {BANK_MAPS}")
+    return (slot << log2b) | lsb
+
+
 @dataclass(frozen=True)
 class BankedLayout:
     """Bank-major storage layout: logical row r lives at physical row
@@ -90,6 +118,12 @@ class BankedLayout:
 
     def bank_slot(self, r):
         return bank_slot_of(r, self.n_banks, self.mapping, self.shift)
+
+    def logical_row(self, bank, slot):
+        """Inverse of ``bank_slot``: the logical row living at (bank, slot).
+        Bijective for every map — ``logical_row(*bank_slot(r)) == r``."""
+        return logical_row_of(bank, slot, self.n_banks, self.mapping,
+                              self.shift)
 
     def physical_row(self, r, n_rows: int):
         return physical_row_of(r, self.n_banks, n_rows // self.n_banks,

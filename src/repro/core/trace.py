@@ -46,6 +46,9 @@ import numpy as np
 
 from repro.core.memsim import LANES
 
+__all__ = ["AddressTrace", "TraceBuilder", "as_ops",
+           "KIND_LOAD", "KIND_STORE", "KIND_TW", "LANES"]
+
 KIND_LOAD, KIND_STORE, KIND_TW = 0, 1, 2
 
 _KIND_NAMES = {"load": KIND_LOAD, "store": KIND_STORE, "tw": KIND_TW,

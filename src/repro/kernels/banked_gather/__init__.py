@@ -6,13 +6,20 @@ from repro.kernels.banked_gather.ref import banked_gather_ref
 from repro.kernels.registry import Kernel, register
 
 
-def _run(arch, table, idx, *, interpret=True):
+def _run(arch, table, idx, *, table_banked=False, interpret=True):
     """Gather logical rows ``idx`` from a logical table under ``arch``'s
-    storage layout (multi-port memories replicate data: no swizzle)."""
+    storage layout (multi-port memories replicate data: no swizzle).
+
+    ``table_banked=True`` declares the table already stored bank-major
+    (a persistent pool, e.g. the serving paged-KV pool) and skips the
+    per-call relayout — the hot path for state that lives in the banked
+    layout across many calls."""
     lay = arch.layout
     if lay is None:
         return banked_gather_ref(table, idx)
-    return banked_gather(lay.to_banked(table), idx, lay.n_banks, lay.mapping,
+    if not table_banked:
+        table = lay.to_banked(table)
+    return banked_gather(table, idx, lay.n_banks, lay.mapping,
                          shift=lay.shift, interpret=interpret)
 
 

@@ -16,8 +16,6 @@ D_TILE = 512 f32 lanes = 2 KB-aligned (multiple of 128 for the VPU).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -40,6 +38,13 @@ def _bank_physical_row(r, n_banks: int, log2_banks: int, rows_per_bank: int,
     return physical_row_of(r, n_banks, rows_per_bank, mapping, shift)
 
 
+def _row_tile(d: int) -> int:
+    """Row-tile width: the standard 2 KB tile when the row divides evenly,
+    otherwise one tile spanning the whole row (narrow rows — e.g. paged-KV
+    page lines — are a single DMA)."""
+    return D_TILE if d % D_TILE == 0 else d
+
+
 def banked_gather_kernel(table_banked: jax.Array, idx: jax.Array,
                          n_banks: int, mapping: str = "lsb",
                          shift: int = 1, interpret: bool = True) -> jax.Array:
@@ -47,7 +52,8 @@ def banked_gather_kernel(table_banked: jax.Array, idx: jax.Array,
     idx: (N,) int32 logical rows.  Returns (N, D) gathered rows."""
     v, d = table_banked.shape
     n = idx.shape[0]
-    assert v % n_banks == 0 and d % D_TILE == 0, (v, d)
+    assert v % n_banks == 0, (v, n_banks)
+    d_tile = _row_tile(d)
     log2b = n_banks.bit_length() - 1
     rows_per_bank = v // n_banks
 
@@ -61,9 +67,9 @@ def banked_gather_kernel(table_banked: jax.Array, idx: jax.Array,
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n, d // D_TILE),
-        in_specs=[pl.BlockSpec((1, D_TILE), table_map)],
-        out_specs=pl.BlockSpec((1, D_TILE), out_map),
+        grid=(n, d // d_tile),
+        in_specs=[pl.BlockSpec((1, d_tile), table_map)],
+        out_specs=pl.BlockSpec((1, d_tile), out_map),
     )
     fn = pl.pallas_call(
         _gather_kernel,

@@ -32,13 +32,14 @@ def from_banked_layout(table_banked: jnp.ndarray, n_banks: int,
     return BankedLayout(n_banks, mapping).from_banked(table_banked)
 
 
-def banked_gather_trace(arch, table, idx, **_):
+def banked_gather_trace(arch, table, idx, mask=None, **_):
     """The gather's exact AddressTrace: lane j of op o requests logical row
     ``idx[16·o + j]``.  Rows are the banked unit (the bank map keys on the
     row index), so the row stream is the address stream — one gather call is
-    one load instruction."""
+    one load instruction.  ``mask`` predicates lanes off (clamped-but-unused
+    requests, e.g. unmapped paged-KV pages)."""
     from repro.kernels.registry import row_stream_trace
-    return row_stream_trace(idx, kind="load")
+    return row_stream_trace(idx, kind="load", mask=mask)
 
 
 @functools.partial(jax.jit,

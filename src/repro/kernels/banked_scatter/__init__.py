@@ -4,12 +4,19 @@ from repro.kernels.banked_scatter.ref import banked_scatter_ref
 from repro.kernels.registry import Kernel, register
 
 
-def _run(arch, table, idx, updates, *, interpret=True):
+def _run(arch, table, idx, updates, *, table_banked=False, interpret=True):
     """Scatter ``updates`` into logical rows ``idx`` of a logical table;
-    returns the updated table in logical order."""
+    returns the updated table in logical order.
+
+    ``table_banked=True`` declares the table already stored bank-major (a
+    persistent pool, e.g. the serving paged-KV pool): the per-call relayout
+    is skipped on BOTH sides and the result stays bank-major."""
     lay = arch.layout
     if lay is None:
         return banked_scatter_ref(table, idx, updates)
+    if table_banked:
+        return banked_scatter(table, idx, updates, lay.n_banks, lay.mapping,
+                              shift=lay.shift, interpret=interpret)
     out = banked_scatter(lay.to_banked(table), idx, updates, lay.n_banks,
                          lay.mapping, shift=lay.shift, interpret=interpret)
     return lay.from_banked(out)

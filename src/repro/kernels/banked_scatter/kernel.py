@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.banked_gather.kernel import _bank_physical_row
+from repro.kernels.banked_gather.kernel import _bank_physical_row, _row_tile
 
 D_TILE = 512
 
@@ -43,7 +43,8 @@ def banked_scatter_kernel(table_banked: jax.Array, idx: jax.Array,
     v, d = table_banked.shape
     n = idx.shape[0]
     assert updates.shape == (n, d)
-    assert v % n_banks == 0 and d % D_TILE == 0, (v, d)
+    assert v % n_banks == 0, (v, n_banks)
+    d_tile = _row_tile(d)
     log2b = n_banks.bit_length() - 1
     rows_per_bank = v // n_banks
 
@@ -57,10 +58,10 @@ def banked_scatter_kernel(table_banked: jax.Array, idx: jax.Array,
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n, d // D_TILE),
-        in_specs=[pl.BlockSpec((1, D_TILE), upd_map),
-                  pl.BlockSpec((1, D_TILE), out_map)],
-        out_specs=pl.BlockSpec((1, D_TILE), out_map),
+        grid=(n, d // d_tile),
+        in_specs=[pl.BlockSpec((1, d_tile), upd_map),
+                  pl.BlockSpec((1, d_tile), out_map)],
+        out_specs=pl.BlockSpec((1, d_tile), out_map),
     )
     fn = pl.pallas_call(
         _scatter_kernel,

@@ -8,12 +8,12 @@ import jax.numpy as jnp
 from repro.kernels.banked_scatter.kernel import banked_scatter_kernel
 
 
-def banked_scatter_trace(arch, table, idx, updates, **_):
+def banked_scatter_trace(arch, table, idx, updates=None, mask=None, **_):
     """The scatter's exact AddressTrace: the row-index stream as one store
     instruction (the paper's 6 %-efficiency write side — all lanes of a
-    column-major stream hit one bank)."""
+    column-major stream hit one bank).  ``mask`` predicates lanes off."""
     from repro.kernels.registry import row_stream_trace
-    return row_stream_trace(idx, kind="store")
+    return row_stream_trace(idx, kind="store", mask=mask)
 
 
 @functools.partial(jax.jit,

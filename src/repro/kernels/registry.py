@@ -127,14 +127,15 @@ def names() -> tuple[str, ...]:
 # Shared trace helpers (kernels whose address trace is their index stream)
 # --------------------------------------------------------------------------
 
-def row_stream_trace(idx, kind: str = "load"):
+def row_stream_trace(idx, kind: str = "load", mask=None):
     """A row-index request stream as a one-instruction AddressTrace: LANES
     indices per operation, interpreted as word addresses (rows are the
-    banked unit, so the row stream IS the exact address stream)."""
+    banked unit, so the row stream IS the exact address stream).  ``mask``
+    predicates lanes off (e.g. unmapped paged-KV pages issue no request)."""
     import numpy as np
 
     from repro.core.trace import AddressTrace
-    return AddressTrace.from_stream(np.asarray(idx), kind=kind)
+    return AddressTrace.from_stream(np.asarray(idx), kind=kind, mask=mask)
 
 
 def row_stream_cost(arch, idx, is_write: bool) -> int:

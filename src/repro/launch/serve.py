@@ -1,7 +1,13 @@
 """Serving launcher: batched generate with --arch <id> (smoke configs on
 CPU; full configs lower via repro.launch.dryrun decode cells).
 
-  python -m repro.launch.serve --arch llama3.2-1b --batch 4
+The KV cache runs on the banked paged pool by default (--kv-mode paged);
+--mem-arch picks the memory architecture the pool derives its banking from,
+and --cost prints the recorded serving AddressTrace priced under a set of
+paper memories (docs/SERVING.md walks through the numbers).
+
+  python -m repro.launch.serve --arch llama3.2-1b --batch 4 \
+      --mem-arch 16B --cost
 """
 from __future__ import annotations
 
@@ -23,18 +29,47 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--mem-arch", default="16B",
+                    help="memory architecture the paged-KV pool banks on "
+                         "(any repro.core.arch name, e.g. 16B-offset)")
+    ap.add_argument("--kv-mode", choices=("paged", "dense"), default="paged")
+    ap.add_argument("--page-len", type=int, default=8,
+                    help="tokens per KV page")
+    ap.add_argument("--cost", action="store_true",
+                    help="price the recorded serving trace on the paper "
+                         "memories (paged mode only)")
     args = ap.parse_args()
+    if args.cost and args.kv_mode != "paged":
+        ap.error("--cost needs --kv-mode paged (dense mode records no "
+                 "serving traces)")
 
     cfg = get_smoke_config(args.arch)
     rc = RunConfig(remat="none", attn_impl="dense")
     params = init_tree(model_specs(cfg), jax.random.PRNGKey(0))
     engine = ServeEngine(cfg, rc, params, NO_AXES, max_batch=args.batch,
-                         max_seq=args.prompt_len + args.new_tokens + 4)
+                         max_seq=args.prompt_len + args.new_tokens + 4,
+                         mem_arch=args.mem_arch, kv_mode=args.kv_mode,
+                         page_len=args.page_len)
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
     res = engine.generate(prompts, max_new_tokens=args.new_tokens)
     for b in range(args.batch):
         print(f"req{b}: {res.tokens[b].tolist()}")
+
+    if args.cost:
+        from repro.core import arch as _arch
+        step = engine.step_trace()
+        full = engine.serving_trace()
+        print(f"\nserving KV traffic ({engine.n_kv_layers} KV layers, "
+              f"page_len={args.page_len}): step {step.n_ops} ops, "
+              f"generation {full.n_ops} ops")
+        print(f"{'memory':<12}{'step_cyc':>9}{'total_cyc':>10}"
+              f"{'total_us':>9}")
+        for name in ("16B", "16B-offset", "8B", "4B", "4R-1W", "4R-2W"):
+            a = _arch.get(name)
+            cs, cf = a.cost(step), a.cost(full)
+            print(f"{name:<12}{cs.total_cycles:>9}{cf.total_cycles:>10}"
+                  f"{cf.time_us(a.fmax_mhz):>9.2f}")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,6 @@ while-body single-counting (launch/roofline.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -131,10 +130,14 @@ def apply_block(cfg: ModelConfig, rc: RunConfig, p: dict, x: Array, ax: Axes,
 
 def apply_block_decode(cfg: ModelConfig, rc: RunConfig, p: dict, x: Array,
                        cache: dict, pos: Array, ax: Axes,
-                       kind: str, is_moe: bool, j: int):
+                       kind: str, is_moe: bool, j: int, attn_fn=None):
+    """One block's decode step.  ``attn_fn`` swaps the attention-cache
+    implementation (same signature as ``L.attention_decode``) — the serving
+    engine's banked paged-KV path plugs in here, reusing the block's
+    residual/FFN structure unchanged."""
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if kind == "attn":
-        h, new_cache = L.attention_decode(
+        h, new_cache = (attn_fn or L.attention_decode)(
             cfg, p["mixer"], h, cache, pos, ax,
             window=_block_window(cfg, j))
     else:

@@ -1,3 +1,33 @@
-from repro.serving.engine import ServeEngine, GenerationResult
+"""Serving on the banked memory model (docs/SERVING.md).
 
-__all__ = ["ServeEngine", "GenerationResult"]
+``ServeEngine`` runs batched prefill + decode with its KV cache living in a
+banked paged pool: pages are allocated by the paper's carry-chain arbiter
+(``kvcache.allocate_pages``), every decode-step KV read/write flows through
+the ``banked_gather`` / ``banked_scatter`` registry kernels, and each step's
+request stream is recorded as a first-class
+``repro.core.trace.AddressTrace`` (``engine.step_trace()``), so
+``arch.cost(trace)`` prices serving traffic exactly like the Table II/III
+kernels.  ``bench.serving_workload`` wraps the same traffic as a sweep/tune
+workload (``kvcache.simulate_serving_trace`` — no model required).
+
+Layout decisions (bank count, page→bank map, map shift) always come from a
+``repro.core.arch`` architecture via ``PagedKVConfig.from_arch`` — serving
+holds no private layout constants.
+"""
+from repro.serving.engine import GenerationResult, ServeEngine
+from repro.serving.kvcache import (PagedKVConfig, PagedKVState,
+                                   PageTableState, allocate_pages,
+                                   append_token, bank_load_stats,
+                                   decode_step_trace, gather_kv,
+                                   gather_pages, init_pages, init_state,
+                                   pool_pages, prefill_trace, scatter_pages,
+                                   simulate_serving_trace)
+
+__all__ = [
+    "ServeEngine", "GenerationResult",
+    "PagedKVConfig", "PagedKVState", "PageTableState",
+    "pool_pages", "init_pages", "init_state", "allocate_pages",
+    "append_token", "gather_kv", "bank_load_stats",
+    "gather_pages", "scatter_pages",
+    "decode_step_trace", "prefill_trace", "simulate_serving_trace",
+]

@@ -1,14 +1,30 @@
 """Batched serving engine: continuous-batch prefill + jit'd decode loop over
-the banked KV cache (paper mapping: KV pages = banks, sequence-sharded on the
-model axis — launch/sharding.py 'seq' rule).
+the banked paged-KV pool (paper mapping: KV pages = banks; docs/SERVING.md).
 
-The engine pads a request batch to a fixed shape (static compile), prefills
-per-request caches in one shot, then decodes greedily (or with temperature)
-until max_new_tokens.  Cache layout and decode step are identical to the
-dry-run's serve_step lowering.
+The engine pads a request batch to a fixed shape (static compile) and
+prefills per-request caches in one shot.  In the default ``kv_mode="paged"``
+the prefill K/V is ingested into per-layer bank-major page pools (one
+``banked_scatter`` per pool) and the decode loop performs **all** KV traffic
+through the registry kernels on those pools:
+
+  * read: every step gathers each sequence's page list from the K and V
+    pools via ``kernels.get("banked_gather")`` (the paged-attention read);
+  * write: the new token's K/V is inserted into the gathered view and the
+    sequence's *current* page is written back via
+    ``kernels.get("banked_scatter")`` (a read-modify-write append).
+
+No dense (seq-contiguous) KV cache exists after prefill ingest.  Every
+decode step also records its exact ``repro.core.trace.AddressTrace``
+(``step_trace()`` / ``serving_trace()``), so ``arch.cost(trace)`` prices the
+serving traffic with the same model that prices the Table II/III kernels.
+
+``kv_mode="dense"`` keeps the pre-banked reference path (the oracle the
+paged path is pinned against in tests/test_serving_paged.py).
 """
 from __future__ import annotations
 
+import functools
+import math
 from dataclasses import dataclass
 
 import jax
@@ -18,7 +34,9 @@ import numpy as np
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import arch as _arch
 from repro.launch.sharding import Axes
+from repro.models import layers as L
 from repro.models import transformer as T
+from repro.serving import kvcache as KV
 
 
 @dataclass
@@ -31,38 +49,191 @@ class GenerationResult:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, rc: RunConfig, params, ax: Axes,
                  max_batch: int = 8, max_seq: int = 256,
-                 mem_arch="16B"):
+                 mem_arch="16B", kv_mode: str = "paged",
+                 page_len: int = 8, kernel_interpret: bool = True):
         self.cfg, self.rc, self.ax = cfg, rc, ax
         self.params = params
         self.max_batch, self.max_seq = max_batch, max_seq
         #: the shared-memory architecture serving-side layout decisions come
         #: from (KV page banking; see ``paged_kv_config``)
         self.mem_arch = _arch.resolve(mem_arch)
+        if kv_mode not in ("paged", "dense"):
+            raise ValueError(f"kv_mode must be 'paged' or 'dense', "
+                             f"got {kv_mode!r}")
+        if kv_mode == "paged" and self.mem_arch.layout is None:
+            raise ValueError(
+                f"{self.mem_arch.name} has no banked layout; pick a banked "
+                f"mem_arch for paged-KV serving (or kv_mode='dense')")
+        self.kv_mode = kv_mode
+        self.page_len = page_len
+        self.kernel_interpret = kernel_interpret
+        self.kv_cfg = (self.paged_kv_config(page_len)
+                       if kv_mode == "paged" else None)
         self._prefill = jax.jit(
             lambda p, t: T.prefill(cfg, rc, p, t, ax))
         self._decode = jax.jit(
             lambda p, tok, cache, pos: T.decode_step(cfg, rc, p, tok, cache,
                                                      pos, ax))
+        self._decode_paged = jax.jit(self._paged_step)
+        self._step_traces: list = []
+        self._prefill_trace = None
+        #: final PageTableState of the last paged generate (bank occupancy
+        #: introspection: ``kvcache.bank_load_stats(engine.last_pages)``)
+        self.last_pages: KV.PageTableState | None = None
 
-    def paged_kv_config(self, page_len: int = 16):
+    # -- configuration -----------------------------------------------------
+
+    def paged_kv_config(self, page_len: int = 8) -> KV.PagedKVConfig:
         """Banked paged-KV pool layout for this engine's batch/seq budget,
         derived from ``mem_arch`` via ``repro.core.arch`` (bank count and
         page→bank map come from the architecture's ``BankedLayout``, not
         serving-local constants).  Pool is sized 2× the worst-case live
         pages, rounded up to a whole number of banks."""
-        from repro.serving.kvcache import PagedKVConfig
         lay = self.mem_arch.layout
         if lay is None:
             raise ValueError(
                 f"{self.mem_arch.name} has no banked layout; pick a banked "
                 f"mem_arch for paged-KV serving")
-        pages_per_seq = -(-self.max_seq // page_len)
-        n_pages = 2 * self.max_batch * pages_per_seq
-        n_pages = -(-n_pages // lay.n_banks) * lay.n_banks
         kv_heads = self.cfg.n_kv_heads or self.cfg.n_heads
-        return PagedKVConfig.from_arch(
-            self.mem_arch, n_pages=n_pages, page_len=page_len,
-            kv_heads=kv_heads, head_dim=self.cfg.hd)
+        return KV.PagedKVConfig.from_arch(
+            self.mem_arch,
+            n_pages=KV.pool_pages(lay.n_banks, self.max_batch, self.max_seq,
+                                  page_len),
+            page_len=page_len, kv_heads=kv_heads, head_dim=self.cfg.hd)
+
+    @property
+    def n_kv_layers(self) -> int:
+        """Attention layers with a KV pool (pattern attn blocks × scan)."""
+        return self.cfg.n_superblocks * sum(
+            1 for kind, _ in self.cfg.block_pattern() if kind == "attn")
+
+    # -- paged decode path -------------------------------------------------
+
+    def _paged_attention_decode(self, cfg, p, x, cache, pos, ax, *,
+                                window: int = 0, pages=None):
+        """``L.attention_decode`` against the banked page pool: gather the
+        sequence's pages (banked_gather), insert the new token, attend,
+        write the current page back (banked_scatter).  Numerics match the
+        dense path — same einsums, masks, and dtypes."""
+        kv = self.kv_cfg
+        arch = self.mem_arch
+        b = x.shape[0]
+        plen = kv.page_len
+        n_pt = pages.page_table.shape[1]
+        s_all = n_pt * plen
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+        q, k_new, v_new = L._qkv(cfg, p, x, pos[None], ax)
+        ids = jnp.maximum(pages.page_table, 0).reshape(-1)
+        ck = KV.gather_pages(arch, kv, cache["k"], ids,
+                             interpret=self.kernel_interpret)
+        cv = KV.gather_pages(arch, kv, cache["v"], ids,
+                             interpret=self.kernel_interpret)
+        ck = ck.reshape(b, s_all, kvh, hd)
+        cv = cv.reshape(b, s_all, kvh, hd)
+        hot = (jnp.arange(s_all) == pos)[None, :, None, None]
+        ck = jnp.where(hot, k_new.astype(ck.dtype), ck)
+        cv = jnp.where(hot, v_new.astype(cv.dtype), cv)
+        idx = jnp.arange(s_all)
+        valid = (idx[None, :] <= pos) & jnp.repeat(
+            pages.page_table >= 0, plen, axis=1)
+        if window:
+            valid &= (pos - idx[None, :]) < window
+        s = jnp.einsum("bqkgh,btkh->bkgqt", q,
+                       ck.astype(q.dtype)) / math.sqrt(hd)
+        s = L.softcap(s, cfg.attn_softcap)
+        s = jnp.where(valid[:, None, None, None, :], s, L.NEG_INF)
+        pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgqt,btkh->bqkgh", pr, cv.astype(q.dtype))
+        o = o.reshape(b, 1, cfg.n_heads, hd)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+        # read-modify-write append: the current page goes back to the pool
+        pg = pos // plen
+        cur = jnp.maximum(pages.page_table[jnp.arange(b), pg], 0)
+        k_line = jax.lax.dynamic_slice_in_dim(ck, pg * plen, plen, axis=1)
+        v_line = jax.lax.dynamic_slice_in_dim(cv, pg * plen, plen, axis=1)
+        kp = KV.scatter_pages(arch, kv, cache["k"], cur,
+                              k_line.reshape(b, -1),
+                              interpret=self.kernel_interpret)
+        vp = KV.scatter_pages(arch, kv, cache["v"], cur,
+                              v_line.reshape(b, -1),
+                              interpret=self.kernel_interpret)
+        return out, {"k": kp, "v": vp}
+
+    def _paged_step(self, params, tok, pools, pages, ssm, pos):
+        """One full-model decode step over the page pools (jit'd once; pos
+        is traced).  Mirrors ``T.decode_step``'s superblock ordering."""
+        cfg, rc, ax = self.cfg, self.rc, self.ax
+        dtype = jnp.dtype(rc.compute_dtype)
+        need = (pages.seq_lens % self.kv_cfg.page_len) == 0
+        pages, _ = KV.allocate_pages(self.kv_cfg, pages, need)
+        x = params["embed"].astype(dtype)[tok]
+        pattern = cfg.block_pattern()
+        pools = dict(pools)
+        ssm_parts: dict = {f"b{j}": [] for j, (kind, _) in enumerate(pattern)
+                           if kind != "attn"}
+        attn_fn = functools.partial(self._paged_attention_decode, pages=pages)
+        for sb in range(cfg.n_superblocks):
+            for j, (kind, is_moe) in enumerate(pattern):
+                p_sb = jax.tree.map(lambda a: a[sb],
+                                    params["blocks"][f"b{j}"])
+                if kind == "attn":
+                    key = f"b{j}s{sb}"
+                    x, pools[key] = T.apply_block_decode(
+                        cfg, rc, p_sb, x, pools[key], pos, ax, kind, is_moe,
+                        j, attn_fn=attn_fn)
+                else:
+                    c_sb = jax.tree.map(lambda a: a[sb], ssm[f"b{j}"])
+                    x, nc = T.apply_block_decode(
+                        cfg, rc, p_sb, x, c_sb, pos, ax, kind, is_moe, j)
+                    ssm_parts[f"b{j}"].append(nc)
+        new_ssm = {k: jax.tree.map(lambda *xs: jnp.stack(xs), *v)
+                   for k, v in ssm_parts.items()}
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = T._unembed(cfg, params, x)
+        pages = pages._replace(seq_lens=pages.seq_lens + 1)
+        return logits, pools, pages, new_ssm
+
+    def _ingest_prefill(self, cache, plen: int, batch: int):
+        """Allocate every prompt page and scatter the prefill K/V into the
+        per-layer pools (one banked_scatter per pool) — after this, the
+        dense prefill cache is dead and all KV state lives banked."""
+        kv = self.kv_cfg
+        plen_pg = kv.page_len
+        n_pref = -(-plen // plen_pg)
+        pages = KV.init_pages(kv, batch, self.max_seq)
+        ones = jnp.ones((batch,), bool)
+        for p in range(n_pref):
+            pages = pages._replace(
+                seq_lens=jnp.full((batch,), p * plen_pg, jnp.int32))
+            pages, _ = KV.allocate_pages(kv, pages, ones)
+        pages = pages._replace(
+            seq_lens=jnp.full((batch,), plen, jnp.int32))
+        ids = jnp.maximum(pages.page_table[:, :n_pref], 0).reshape(-1)
+
+        def pool_of(kc):
+            # kc: (B, t, KV, HD) with t ≤ plen (SWA prefill keeps only the
+            # window; earlier slots stay zero and are window-masked anyway)
+            t = kc.shape[1]
+            buf = jnp.zeros((batch, n_pref * plen_pg) + kc.shape[2:],
+                            kc.dtype)
+            buf = buf.at[:, plen - t:plen].set(kc)
+            rows = buf.reshape(batch * n_pref, kv.row_width)
+            pool2d = jnp.zeros((kv.n_pages, kv.row_width), kc.dtype)
+            return KV.scatter_pages(self.mem_arch, kv, pool2d, ids, rows,
+                                    interpret=self.kernel_interpret)
+
+        pools, ssm = {}, {}
+        for j, (kind, _) in enumerate(self.cfg.block_pattern()):
+            bc = cache["blocks"][f"b{j}"]
+            if kind != "attn":
+                ssm[f"b{j}"] = bc
+                continue
+            for sb in range(self.cfg.n_superblocks):
+                pools[f"b{j}s{sb}"] = {"k": pool_of(bc["k"][sb]),
+                                       "v": pool_of(bc["v"][sb])}
+        return pools, pages, ssm
+
+    # -- dense reference path ----------------------------------------------
 
     def _pad_cache(self, cache, prompt_len: int):
         """Grow prefill caches (len = prompt) to the decode buffer (max_seq).
@@ -82,6 +253,8 @@ class ServeEngine:
             return x
         return jax.tree_util.tree_map_with_path(grow, cache)
 
+    # -- generation --------------------------------------------------------
+
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
                  temperature: float = 0.0,
                  seed: int = 0) -> GenerationResult:
@@ -89,17 +262,35 @@ class ServeEngine:
         b, plen = prompts.shape
         assert b <= self.max_batch and plen + max_new_tokens <= self.max_seq
         logits, cache = self._prefill(self.params, jnp.asarray(prompts))
-        cache = self._pad_cache(cache, plen)
         key = jax.random.PRNGKey(seed)
         out = []
         tok = self._sample(logits[:, -1], temperature, key)
         out.append(tok)
+        paged = self.kv_mode == "paged"
+        if paged:
+            pools, pages, ssm = self._ingest_prefill(cache, plen, b)
+            del cache                       # no dense KV survives prefill
+            self._step_traces = []
+            self._prefill_trace = KV.prefill_trace(
+                self.kv_cfg, np.asarray(pages.page_table), plen,
+                self.n_kv_layers)
+        else:
+            cache = self._pad_cache(cache, plen)
         for i in range(1, max_new_tokens):
             pos = jnp.asarray(plen + i - 1, jnp.int32)
-            logits, cache = self._decode(self.params, tok, cache, pos)
+            if paged:
+                logits, pools, pages, ssm = self._decode_paged(
+                    self.params, tok, pools, pages, ssm, pos)
+                self._step_traces.append(KV.decode_step_trace(
+                    self.kv_cfg, np.asarray(pages.page_table), plen + i - 1,
+                    self.n_kv_layers))
+            else:
+                logits, cache = self._decode(self.params, tok, cache, pos)
             key, sub = jax.random.split(key)
             tok = self._sample(logits[:, -1], temperature, sub)
             out.append(tok)
+        if paged:
+            self.last_pages = pages
         tokens = np.concatenate([np.asarray(t) for t in out], axis=1)
         return GenerationResult(tokens=tokens, prompt_len=plen,
                                 steps=max_new_tokens)
@@ -110,3 +301,28 @@ class ServeEngine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return jax.random.categorical(
             key, logits / temperature, axis=-1).astype(jnp.int32)[:, None]
+
+    # -- serving-cost introspection ----------------------------------------
+
+    def step_trace(self, step: int = -1):
+        """The exact ``AddressTrace`` one decode step put on the KV pool
+        (recorded by the last ``generate``); ``arch.cost(engine.step_trace())``
+        prices a serving step like any Table II/III kernel."""
+        if not self._step_traces:
+            raise RuntimeError(
+                "no decode traces recorded; run generate() with "
+                "kv_mode='paged' and max_new_tokens >= 2 first "
+                "(the first token comes from prefill, not a decode step)")
+        return self._step_traces[step]
+
+    def serving_trace(self, include_prefill: bool = True):
+        """The last generation's full KV ``AddressTrace`` (prefill page
+        writes + every decode step), one costed artifact."""
+        from repro.core.trace import AddressTrace
+        chunks = list(self._step_traces)
+        if include_prefill and self._prefill_trace is not None:
+            chunks = [self._prefill_trace] + chunks
+        if not chunks:
+            raise RuntimeError(
+                "no traces recorded; run generate() with kv_mode='paged'")
+        return AddressTrace.concat(*chunks)

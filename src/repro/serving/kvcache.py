@@ -1,11 +1,17 @@
 """Banked paged KV cache — the paper's shared-memory banking applied to
-serving state (DESIGN.md §2.2 table, row "KV page").
+serving state, end-to-end (docs/SERVING.md is the narrative version).
 
-Layout: the cache is a pool of fixed-size pages, physically grouped into
-``n_banks`` banks; a sequence's logical page t lives in bank
-``bank_map(t)`` (lsb / offset / xor — the same maps as the FPGA memory, and
-the same reason: consecutive-page *and* strided access streams should spread
-across banks).  A page table maps (sequence, logical page) → physical page.
+Pages are the banked unit.  The cache is a pool of fixed-size pages stored
+*bank-major* (physical page ``bank · pages_per_bank + slot``), exactly the
+storage layout ``repro.core.arch.BankedLayout`` defines for the FPGA memory
+and the Pallas kernels.  A page table maps (sequence, logical-in-sequence
+page) → *logical pool page id*; the id is minted with
+``BankedLayout.logical_row(bank, slot)`` — the inverse bank map — so that
+
+  * ``kernels.get("banked_gather") / banked_scatter`` resolve the id to the
+    physical page through the very same index-map math, and
+  * the cost model's bank maps (``arch.cost`` on an ``AddressTrace`` of page
+    ids) see the bank the allocator actually placed the page in.
 
 Allocation is the carry-chain arbiter at page granularity: a batch of
 sequences requesting new pages forms a request vector per bank; grant order
@@ -13,23 +19,52 @@ sequences requesting new pages forms a request vector per bank; grant order
 and requests beyond a bank's free capacity spill to the least-loaded bank
 (the TPU can't stall — same capacity reasoning as MoE dispatch).
 
-The gather path reads K/V pages for attention with ``kernels.banked_gather``
-semantics (bank-major physical storage); pure-jnp here so it jits anywhere,
-with the Pallas kernel as the TPU hot path.
+Three access paths share the layout:
+
+  * kernel path (the serving hot path): ``gather_pages`` / ``scatter_pages``
+    call the registry kernels on a persistent bank-major 2-D pool
+    (``table_banked=True`` — no per-call relayout);
+  * reference path: ``append_token`` / ``gather_kv`` are the pure-jnp oracle
+    on a 4-D pool, used by tests to pin the kernel path bit-exactly;
+  * trace path: ``decode_step_trace`` / ``prefill_trace`` /
+    ``simulate_serving_trace`` lower the same request streams to
+    ``repro.core.trace.AddressTrace`` via the kernels' own trace generators,
+    so ``arch.cost(trace)`` prices serving traffic the same way it prices
+    the Table II/III kernels.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.conflicts import bank_counts
 from repro.core.arbiter import grant_positions
+from repro.core.conflicts import bank_counts
 
 Array = jnp.ndarray
 
+__all__ = [
+    "PagedKVConfig", "PageTableState", "PagedKVState",
+    "pool_pages", "init_pages", "init_state", "allocate_pages",
+    "append_token", "gather_kv", "bank_load_stats",
+    "pool_rows", "gather_pages", "scatter_pages",
+    "kv_read_stream", "decode_step_trace", "prefill_trace",
+    "simulate_serving_trace",
+]
 
-@dataclass
+
+def pool_pages(n_banks: int, batch: int, max_seq: int, page_len: int,
+               slack: int = 2) -> int:
+    """Physical pool size: ``slack``× the worst-case live pages of a
+    (batch, max_seq) budget, rounded up to a whole number of banks."""
+    pages_per_seq = -(-max_seq // page_len)
+    n = slack * batch * pages_per_seq
+    return -(-n // n_banks) * n_banks
+
+
+@dataclass(frozen=True)
 class PagedKVConfig:
     n_pages: int            # physical pool size (multiple of n_banks)
     page_len: int           # tokens per page
@@ -59,7 +94,7 @@ class PagedKVConfig:
     @property
     def layout(self):
         """The ``BankedLayout`` this pool implements (single source of truth
-        for page→(bank, slot) math, shared with the FPGA simulator and the
+        for page↔(bank, slot) math, shared with the FPGA simulator and the
         Pallas kernels)."""
         from repro.core.arch import BankedLayout
         return BankedLayout(self.n_banks, self.mapping, self.map_shift)
@@ -68,51 +103,71 @@ class PagedKVConfig:
     def pages_per_bank(self) -> int:
         return self.n_pages // self.n_banks
 
+    @property
+    def row_width(self) -> int:
+        """Words per page line in the 2-D kernel view of the pool."""
+        return self.page_len * self.kv_heads * self.head_dim
 
-@dataclass
-class PagedKVState:
-    """Functional cache state (pytree)."""
-    k_pool: Array           # (n_pages, page_len, KV, HD)
-    v_pool: Array
-    page_table: Array       # (B, max_pages) int32 physical ids (-1 = unmapped)
+
+class PageTableState(NamedTuple):
+    """Allocation state (a pytree — lives inside the jit'd decode step).
+
+    ``page_table`` holds *logical pool page ids* (-1 = unmapped): the very
+    addresses the gather/scatter kernels and the cost model consume.
+    """
+    page_table: Array       # (B, max_pages) int32 logical ids (-1 unmapped)
     seq_lens: Array         # (B,) int32 tokens written per sequence
     bank_used: Array        # (n_banks,) int32 allocated pages per bank
 
 
-def init_state(cfg: PagedKVConfig, batch: int, max_seq: int,
-               dtype=jnp.bfloat16) -> PagedKVState:
+class PagedKVState(NamedTuple):
+    """Reference-path cache state: dense 4-D pools + the page table."""
+    k_pool: Array           # (n_pages, page_len, KV, HD) bank-major pages
+    v_pool: Array
+    pages: PageTableState
+
+
+def init_pages(cfg: PagedKVConfig, batch: int,
+               max_seq: int) -> PageTableState:
     assert cfg.n_pages % cfg.n_banks == 0
     max_pages = -(-max_seq // cfg.page_len)
-    shape = (cfg.n_pages, cfg.page_len, cfg.kv_heads, cfg.head_dim)
-    return PagedKVState(
-        k_pool=jnp.zeros(shape, dtype),
-        v_pool=jnp.zeros(shape, dtype),
+    return PageTableState(
         page_table=jnp.full((batch, max_pages), -1, jnp.int32),
         seq_lens=jnp.zeros((batch,), jnp.int32),
         bank_used=jnp.zeros((cfg.n_banks,), jnp.int32),
     )
 
 
-def _physical_page(cfg: PagedKVConfig, bank: Array, slot: Array) -> Array:
-    """bank-major physical id = bank * pages_per_bank + slot."""
-    return bank * cfg.pages_per_bank + slot
+def init_state(cfg: PagedKVConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> PagedKVState:
+    shape = (cfg.n_pages, cfg.page_len, cfg.kv_heads, cfg.head_dim)
+    return PagedKVState(
+        k_pool=jnp.zeros(shape, dtype),
+        v_pool=jnp.zeros(shape, dtype),
+        pages=init_pages(cfg, batch, max_seq),
+    )
 
 
-def allocate_pages(cfg: PagedKVConfig, state: PagedKVState,
-                   need: Array) -> tuple[PagedKVState, Array]:
+def allocate_pages(cfg: PagedKVConfig, state: PageTableState,
+                   need: Array) -> tuple[PageTableState, Array]:
     """Allocate one page for every sequence with need[b]=True.
 
-    Phase 1 (the arbiter): preferred bank = bank_map(logical page); grant
-    order = exclusive cumsum per bank; grants within the bank's free
-    capacity succeed.  Phase 2 (capacity spill — TPUs can't stall): the
-    remaining requests take slots from the global free list, least-loaded
-    banks first, via a searchsorted over cumulative free counts.  Succeeds
-    while any free page exists.  Returns (new state, (B,) page ids or -1).
+    Phase 1 (the arbiter): preferred bank = bank_map(in-sequence page
+    index); grant order = exclusive cumsum per bank; grants within the
+    bank's free capacity succeed.  Phase 2 (capacity spill — TPUs can't
+    stall): the remaining requests take slots from the global free list,
+    least-loaded banks first, via a searchsorted over cumulative free
+    counts.  Succeeds while any free page exists.
+
+    Returns (new state, (B,) logical pool page ids or -1).  The id is
+    minted via ``BankedLayout.logical_row(bank, slot)``, so the arch's bank
+    map on the id recovers exactly the bank the arbiter granted.
     """
     b = need.shape[0]
     cap = cfg.pages_per_bank
-    logical = state.seq_lens // cfg.page_len            # next logical page
-    pref_bank, _ = cfg.layout.bank_slot(logical)        # arch's bank map
+    lay = cfg.layout
+    logical = state.seq_lens // cfg.page_len            # next in-seq page
+    pref_bank, _ = lay.bank_slot(logical)               # arch's bank map
     need_i = need.astype(jnp.int32)
 
     # phase 1: arbiter grants at the preferred bank
@@ -138,55 +193,219 @@ def allocate_pages(cfg: PagedKVConfig, state: PagedKVState,
     bank = jnp.where(ok1, pref_bank, bank2)
     slot = jnp.where(ok1, slot1, slot2)
     ok = ok1 | ok2
-    phys = jnp.where(ok, _physical_page(cfg, bank, slot), -1)
+    page_id = jnp.where(ok, lay.logical_row(bank, slot), -1)
 
     counts = bank_counts(bank, cfg.n_banks, mask=ok.astype(jnp.int32))
     new_used = state.bank_used + counts
     pt = state.page_table.at[jnp.arange(b), logical].set(
-        jnp.where(ok, phys, state.page_table[jnp.arange(b), logical]))
-    return PagedKVState(state.k_pool, state.v_pool, pt, state.seq_lens,
-                        new_used), phys
+        jnp.where(ok, page_id, state.page_table[jnp.arange(b), logical]))
+    return PageTableState(pt, state.seq_lens, new_used), page_id
 
+
+def _physical(cfg: PagedKVConfig, page_id: Array) -> Array:
+    """Logical pool page id -> bank-major physical page (storage row)."""
+    return cfg.layout.physical_row(page_id, cfg.n_pages)
+
+
+# --------------------------------------------------------------------------
+# reference path (pure jnp; the oracle the kernel path is pinned against)
+# --------------------------------------------------------------------------
 
 def append_token(cfg: PagedKVConfig, state: PagedKVState, k: Array,
                  v: Array) -> PagedKVState:
     """Write one token's (B, KV, HD) K/V at each sequence's current position,
-    allocating pages on page boundaries."""
+    allocating pages on page boundaries (reference write path)."""
     bsz = k.shape[0]
-    need = (state.seq_lens % cfg.page_len) == 0
-    state, _ = allocate_pages(cfg, state, need)
-    logical = state.seq_lens // cfg.page_len
-    phys = state.page_table[jnp.arange(bsz), logical]
-    off = state.seq_lens % cfg.page_len
+    pages = state.pages
+    need = (pages.seq_lens % cfg.page_len) == 0
+    pages, _ = allocate_pages(cfg, pages, need)
+    logical = pages.seq_lens // cfg.page_len
+    page_id = pages.page_table[jnp.arange(bsz), logical]
+    phys = _physical(cfg, page_id)
+    off = pages.seq_lens % cfg.page_len
     k_pool = state.k_pool.at[phys, off].set(k.astype(state.k_pool.dtype))
     v_pool = state.v_pool.at[phys, off].set(v.astype(state.v_pool.dtype))
-    return PagedKVState(k_pool, v_pool, state.page_table,
-                        state.seq_lens + 1, state.bank_used)
+    return PagedKVState(k_pool, v_pool,
+                        PageTableState(pages.page_table, pages.seq_lens + 1,
+                                       pages.bank_used))
 
 
 def gather_kv(cfg: PagedKVConfig, state: PagedKVState,
               max_seq: int) -> tuple[Array, Array, Array]:
     """Materialize (B, max_seq, KV, HD) K/V + validity mask from the pool
-    (the jnp reference path; the Pallas banked_gather kernel is the TPU hot
-    path for the same physical layout)."""
-    bsz, max_pages = state.page_table.shape
+    (the jnp reference path; ``gather_pages`` is the kernel hot path for
+    the same physical layout)."""
+    pages = state.pages
+    bsz, max_pages = pages.page_table.shape
     n_pages_needed = -(-max_seq // cfg.page_len)
-    pt = state.page_table[:, :n_pages_needed]           # (B, P)
-    safe = jnp.maximum(pt, 0)
-    k = state.k_pool[safe]                              # (B, P, L, KV, HD)
-    v = state.v_pool[safe]
+    pt = pages.page_table[:, :n_pages_needed]           # (B, P) logical ids
+    phys = _physical(cfg, jnp.maximum(pt, 0))
+    k = state.k_pool[phys]                              # (B, P, L, KV, HD)
+    v = state.v_pool[phys]
     k = k.reshape(bsz, n_pages_needed * cfg.page_len, cfg.kv_heads,
                   cfg.head_dim)[:, :max_seq]
     v = v.reshape(bsz, n_pages_needed * cfg.page_len, cfg.kv_heads,
                   cfg.head_dim)[:, :max_seq]
     idx = jnp.arange(max_seq)
-    valid = idx[None, :] < state.seq_lens[:, None]
+    valid = idx[None, :] < pages.seq_lens[:, None]
     mapped = jnp.repeat(pt >= 0, cfg.page_len, axis=1)[:, :max_seq]
     return k, v, valid & mapped
 
 
-def bank_load_stats(state: PagedKVState) -> dict:
-    """Paper-style bank efficiency of the current allocation."""
-    used = state.bank_used.astype(jnp.float32)
+def bank_load_stats(state) -> dict:
+    """Paper-style bank efficiency of the current allocation (accepts a
+    ``PageTableState`` or anything carrying ``.pages``)."""
+    pages = getattr(state, "pages", state)
+    used = pages.bank_used.astype(jnp.float32)
     return {"max": used.max(), "mean": used.mean(),
             "serialization": used.max() / jnp.maximum(used.mean(), 1e-9)}
+
+
+# --------------------------------------------------------------------------
+# kernel path (the serving hot path: registry kernels on a bank-major pool)
+# --------------------------------------------------------------------------
+
+def pool_rows(pool: Array) -> Array:
+    """(n_pages, L, KV, HD) pool -> (n_pages, L·KV·HD) kernel view (one page
+    = one bank-major table row)."""
+    return pool.reshape(pool.shape[0], -1)
+
+
+def gather_pages(arch, cfg: PagedKVConfig, pool2d: Array,
+                 page_ids: Array, interpret: bool = True) -> Array:
+    """Gather page lines by *logical* pool page id through
+    ``kernels.get("banked_gather")`` (bank-major persistent pool — no
+    relayout).  page_ids: (N,) int32, already clamped ≥ 0."""
+    from repro.kernels import registry
+    return registry.get("banked_gather").run(
+        arch, pool2d, page_ids, table_banked=True, interpret=interpret)
+
+
+def scatter_pages(arch, cfg: PagedKVConfig, pool2d: Array, page_ids: Array,
+                  rows: Array, interpret: bool = True) -> Array:
+    """Scatter page lines into *logical* pool page ids through
+    ``kernels.get("banked_scatter")``; returns the updated bank-major pool."""
+    from repro.kernels import registry
+    return registry.get("banked_scatter").run(
+        arch, pool2d, page_ids, rows, table_banked=True, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# trace path (what the decode loop costs under arch.cost)
+# --------------------------------------------------------------------------
+
+def kv_read_stream(page_table) -> tuple[np.ndarray, np.ndarray]:
+    """The decode-step read stream: every sequence requests its whole page
+    list (the paged-attention gather).  Returns (ids, active-lane mask) —
+    unmapped (-1) entries are clamped to page 0 but predicated off, exactly
+    what the jit'd gather does with its static page-table width."""
+    pt = np.asarray(page_table)
+    return np.maximum(pt, 0).reshape(-1), (pt >= 0).reshape(-1)
+
+
+def decode_step_trace(cfg: PagedKVConfig, page_table, pos: int,
+                      n_kv_layers: int = 1):
+    """One decode step's exact ``AddressTrace``.
+
+    Per KV layer, in kernel-call order: a K-pool page gather, a V-pool page
+    gather (the paged-attention read), then a K and a V scatter of the
+    sequence's *current* page (the read-modify-write append).  Addresses are
+    logical pool page ids — the banked unit — produced by the registry
+    kernels' own trace generators, so ``arch.cost`` prices serving exactly
+    like any other kernel.
+    """
+    from repro.core.trace import AddressTrace
+    from repro.kernels.banked_gather.ops import banked_gather_trace
+    from repro.kernels.banked_scatter.ops import banked_scatter_trace
+    pt = np.asarray(page_table)
+    b = pt.shape[0]
+    read_ids, read_mask = kv_read_stream(pt)
+    cur = pt[np.arange(b), int(pos) // cfg.page_len]
+    cur_ids, cur_mask = np.maximum(cur, 0), cur >= 0
+    chunks = []
+    for _ in range(n_kv_layers):
+        chunks.append(banked_gather_trace(None, None, read_ids,
+                                          mask=read_mask))
+        chunks.append(banked_gather_trace(None, None, read_ids,
+                                          mask=read_mask))
+        chunks.append(banked_scatter_trace(None, None, cur_ids,
+                                           mask=cur_mask))
+        chunks.append(banked_scatter_trace(None, None, cur_ids,
+                                           mask=cur_mask))
+    t = AddressTrace.concat(*chunks)
+    t.meta.update({"what": "decode_step", "pos": int(pos),
+                   "n_kv_layers": n_kv_layers})
+    return t
+
+
+def prefill_trace(cfg: PagedKVConfig, page_table, prompt_len: int,
+                  n_kv_layers: int = 1):
+    """The prefill ingest's ``AddressTrace``: one K and one V page scatter
+    per layer covering every prompt page (prefill K/V is computed once by
+    the model and written to the pool page-at-a-time)."""
+    from repro.core.trace import AddressTrace
+    from repro.kernels.banked_scatter.ops import banked_scatter_trace
+    pt = np.asarray(page_table)
+    n_pref = -(-prompt_len // cfg.page_len)
+    ids = pt[:, :n_pref]
+    ids_flat, mask = np.maximum(ids, 0).reshape(-1), (ids >= 0).reshape(-1)
+    chunks = []
+    for _ in range(n_kv_layers):
+        chunks.append(banked_scatter_trace(None, None, ids_flat, mask=mask))
+        chunks.append(banked_scatter_trace(None, None, ids_flat, mask=mask))
+    t = AddressTrace.concat(*chunks)
+    t.meta.update({"what": "prefill", "prompt_len": int(prompt_len),
+                   "n_kv_layers": n_kv_layers})
+    return t
+
+
+def simulate_serving_trace(arch, batch: int, prompt_len: int,
+                           decode_steps: int, page_len: int = 8,
+                           n_kv_layers: int = 1, max_seq: int | None = None,
+                           include_prefill: bool = True):
+    """The full serving ``AddressTrace`` of a (batch, context) point without
+    running a model: prefill page writes + ``decode_steps`` decode steps,
+    with pages allocated by the same arbiter the live engine uses.
+
+    The trace is architecture-DEPENDENT (the allocator places pages per the
+    arch's bank map), which is why ``bench.TraceWorkload`` re-lowers it per
+    sweep cell.  Non-banked architectures price the canonical 16-bank LSB
+    pool's stream (multi-port issue cost depends only on lane activity).
+    """
+    from repro.core import arch as _arch
+    from repro.core.trace import AddressTrace
+    a = _arch.resolve(arch)
+    max_seq = max_seq or (prompt_len + decode_steps)
+    if a.layout is not None:
+        cfg = PagedKVConfig.from_arch(
+            a, n_pages=pool_pages(a.layout.n_banks, batch, max_seq, page_len),
+            page_len=page_len, kv_heads=1, head_dim=1)
+    else:
+        cfg = PagedKVConfig(
+            n_pages=pool_pages(16, batch, max_seq, page_len),
+            page_len=page_len, n_banks=16, mapping="lsb", kv_heads=1,
+            head_dim=1, map_shift=1)
+    state = init_pages(cfg, batch, max_seq)
+    ones = jnp.ones((batch,), bool)
+    for p in range(-(-prompt_len // page_len)):         # prompt pages
+        state = state._replace(
+            seq_lens=jnp.full((batch,), p * page_len, jnp.int32))
+        state, _ = allocate_pages(cfg, state, ones)
+    state = state._replace(
+        seq_lens=jnp.full((batch,), prompt_len, jnp.int32))
+    chunks = []
+    if include_prefill:
+        chunks.append(prefill_trace(cfg, state.page_table, prompt_len,
+                                    n_kv_layers))
+    for i in range(decode_steps):                       # decode appends
+        pos = prompt_len + i
+        need = (state.seq_lens % page_len) == 0
+        state, _ = allocate_pages(cfg, state, need)
+        chunks.append(decode_step_trace(cfg, state.page_table, pos,
+                                        n_kv_layers))
+        state = state._replace(seq_lens=state.seq_lens + 1)
+    t = AddressTrace.concat(*chunks)
+    t.meta.update({"what": "serving", "arch": a.name, "batch": batch,
+                   "prompt_len": prompt_len, "decode_steps": decode_steps,
+                   "page_len": page_len, "n_kv_layers": n_kv_layers})
+    return t

@@ -1,8 +1,15 @@
-"""Architecture autotuning — layer 4 of the public API.
+"""Architecture autotuning — layer 4 of the public API
+(docs/ARCHITECTURE.md).
 
-``tune.search(kernel, workload, space, strategy=...)`` sweeps bank count ×
-bank map × broadcast (plus the multi-port family) over one workload's
-``AddressTrace`` and returns ranked ``TuneResult``s.  See search.py.
+``tune.search(kernel, workload, space, strategy=..., objective=...)``
+sweeps bank count × bank map × broadcast (plus the multi-port family) over
+one workload's ``AddressTrace`` and returns ranked ``TuneResult``s.
+Workloads are ISA programs (``bench.Workload``), per-architecture trace
+lowerings (``bench.TraceWorkload`` — e.g. ``bench.serving_workload``'s
+paged-KV traffic), or any registry kernel plus its call args.  Strategies:
+``"exhaustive"`` / ``"hillclimb"``; objectives: ``"time_us"`` /
+``"cycles"`` / ``"area_time"`` (Fig 9; pass ``capacity_kb``).  See
+search.py.
 """
 from repro.tune.search import (EXTENDED_SPACE, PAPER_SPACE, ArchSpace,
                                TuneResult, search)

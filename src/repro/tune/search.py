@@ -5,10 +5,13 @@ broadcast, plus the multi-port family) for the cheapest architecture on one
 workload, costing first-class ``AddressTrace``s through the same
 ``MemoryArchitecture.cost`` path as the benchmark sweep and the ISA VM.
 
-Workloads come in two forms:
+Workloads come in three forms:
 
   * a ``repro.bench.Workload`` (an ISA program, e.g. the paper's
     transpose/FFT builders) — costed via ``bench.run_cell``;
+  * a ``repro.bench.TraceWorkload`` (a per-architecture trace lowering,
+    e.g. ``bench.serving_workload``'s paged-KV traffic) — re-lowered and
+    costed per point;
   * ``(kernel, args)``: any registry kernel with a ``trace`` generator plus
     its call arguments — costed via ``arch.cost(kernel.trace(arch, *args))``.
 
@@ -31,7 +34,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.bench.runner import Workload, run_cell
+from repro.bench.runner import TraceWorkload, Workload, run_cell
 from repro.core import arch as _arch
 
 
@@ -121,11 +124,14 @@ def _objective_fn(objective, capacity_kb):
 
 def _evaluator(kernel, workload):
     """(kernel, workload) -> name -> tidy record."""
-    if isinstance(workload, Workload):
+    if isinstance(workload, (Workload, TraceWorkload)):
+        # TraceWorkloads (e.g. serving traffic) re-lower per architecture —
+        # the page allocator follows the arch's bank map — and cache per
+        # name inside the workload, so revisits stay free.
         return lambda name: run_cell(name, workload)
     if kernel is None:
-        raise ValueError("pass a bench.Workload, or a kernel plus its call "
-                         "args as `workload`")
+        raise ValueError("pass a bench.Workload / bench.TraceWorkload, or a "
+                         "kernel plus its call args as `workload`")
     if isinstance(kernel, str):
         from repro.kernels import registry
         kernel = registry.get(kernel)

@@ -1,0 +1,55 @@
+"""Doc-link checker: every docs/*.md cross-reference and every repo path
+cited in README/docs must exist, so the documentation can't rot silently
+(ISSUE 3 CI satellite).  Covers markdown link targets and backticked
+`src/...`-style path mentions."""
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted([ROOT / "README.md", *(ROOT / "docs").glob("*.md")])
+
+#: path-looking tokens inside backticks or markdown link targets
+PATH_DIRS = ("src", "tests", "examples", "benchmarks", "docs")
+_BACKTICK = re.compile(r"`([^`\n]+)`")
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_PATH_TOKEN = re.compile(
+    r"^(?:%s)/[\w./\-]*$" % "|".join(PATH_DIRS))
+
+
+def _candidate_paths(text: str):
+    for m in _BACKTICK.finditer(text):
+        token = m.group(1).strip()
+        token = token.split("::")[0]            # tests/foo.py::test_bar
+        token = token.split(" ")[-1]            # "python benchmarks/run.py"
+        if _PATH_TOKEN.match(token) and "{" not in token and "…" not in token:
+            yield token
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1).split("#")[0]
+        if target and not target.startswith(("http://", "https://",
+                                             "mailto:")):
+            yield target
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_doc_paths_exist(doc):
+    assert doc.exists(), doc
+    text = doc.read_text()
+    missing = []
+    for token in _candidate_paths(text):
+        base = (ROOT if token.split("/")[0] in PATH_DIRS else doc.parent)
+        # a trailing slash may name a package dir
+        if not (base / token).exists() and not (
+                base / token.rstrip("/")).exists():
+            missing.append(token)
+    assert not missing, (
+        f"{doc.relative_to(ROOT)} references paths that do not exist: "
+        f"{sorted(set(missing))}")
+
+
+def test_docs_tree_is_referenced_from_readme():
+    """README must point readers at the docs tree."""
+    readme = (ROOT / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/SERVING.md" in readme

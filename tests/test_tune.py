@@ -99,5 +99,8 @@ def test_autotune_benchmark_smoke_rows():
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.autotune import rows
     rs = rows(smoke=True)
-    assert len(rs) == 2                           # transpose32 × 2 strategies
+    # (transpose32 + paged-KV serving) × 2 strategies
+    assert len(rs) == 4
+    assert {r["name"].rsplit("_", 1)[0] for r in rs} == {
+        "autotune_transpose32", "autotune_serve_b4_p16_d8"}
     assert all(r["match"] for r in rs)
