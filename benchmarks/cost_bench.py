@@ -1,0 +1,176 @@
+"""Cost-engine benchmark: the perf trajectory of the batched streaming
+engine (repro.core.cost_engine) over the legacy per-architecture loop.
+
+For each workload trace three costing paths are timed against the default
+``tune.ArchSpace`` (9 architectures):
+
+  * ``loop``    — the pre-engine path: one ``MemoryArchitecture._cost_loop``
+                  call per architecture (3 host syncs each);
+  * ``batched`` — one fused ``cost_many`` pass (one device sync total);
+  * ``stream``  — ``cost_many`` over O(block)-memory chunks
+                  (``block_ops`` on dense traces, a lazy ``TraceStream``
+                  for the serving traffic).
+
+All three are verified bit-identical before timing.  The streaming case
+additionally prices a >1e6-op synthetic serving stream that is never
+materialized densely.  Results go to ``BENCH_cost.json`` at the repo root.
+
+CSV: name,us_per_call,derived (speedups | cycles checksum).
+``--smoke`` runs the small points only (CI); ``--check`` exits non-zero if
+the batched path is not at least ``CHECK_SPEEDUP``× the loop anywhere (a
+soft perf-regression guard; the threshold is generous to absorb CI noise).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.bench import fft_workload, serving_workload, transpose_workload
+from repro.core import arch as _arch
+from repro.core.cost_engine import cost_many
+from repro.core.trace import TraceStream
+from repro.tune.search import PAPER_SPACE
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(ROOT, "BENCH_cost.json")
+
+#: the default ArchSpace — the lattice `tune.search` prices (9 points)
+ARCH_NAMES = tuple(PAPER_SPACE.names())
+STREAM_BLOCK_OPS = 4096
+CHECK_SPEEDUP = 2.0       # CI gate; the acceptance target on transpose is 10x
+
+
+def _timeit(fn, repeats: int = 5) -> float:
+    """Best-of-N wall seconds, after one untimed warmup (jit compile)."""
+    fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _serving_trace_16b(batch, prompt_len, decode_steps, page_len):
+    """One fixed (16B-lowered) serving trace priced under every point —
+    identical input work for all three costing paths."""
+    from repro.serving.kvcache import simulate_serving_trace
+    return simulate_serving_trace("16B", batch=batch, prompt_len=prompt_len,
+                                  decode_steps=decode_steps,
+                                  page_len=page_len, n_kv_layers=2)
+
+
+def _cases(smoke: bool):
+    yield "transpose32", transpose_workload(32).trace()
+    yield "serve_b4_p16_d8", _serving_trace_16b(4, 16, 8, 4)
+    if smoke:
+        return
+    yield "transpose64", transpose_workload(64).trace()
+    yield "transpose128", transpose_workload(128).trace()
+    yield "fft4096r4", fft_workload(4096, 4).trace()
+    yield "serve_b8_p64_d64", _serving_trace_16b(8, 64, 64, 8)
+
+
+def bench_case(name: str, trace, archs) -> dict:
+    loop = [a._cost_loop(trace) for a in archs]
+    batched = cost_many(archs, trace)
+    streamed = cost_many(archs, trace, block_ops=STREAM_BLOCK_OPS)
+    equal = batched == loop and streamed == loop
+    loop_s = _timeit(lambda: [a._cost_loop(trace) for a in archs])
+    many_s = _timeit(lambda: cost_many(archs, trace))
+    stream_s = _timeit(
+        lambda: cost_many(archs, trace, block_ops=STREAM_BLOCK_OPS))
+    return {
+        "workload": name, "n_ops": trace.n_ops, "n_archs": len(archs),
+        "loop_s": round(loop_s, 6), "cost_many_s": round(many_s, 6),
+        "stream_s": round(stream_s, 6),
+        "speedup_many": round(loop_s / many_s, 2),
+        "speedup_stream": round(loop_s / stream_s, 2),
+        "cycles_equal": bool(equal),
+        "total_cycles_16B": next(
+            c.total_cycles for a, c in zip(archs, batched)
+            if a.name == "16B"),
+    }
+
+
+def bench_million_op_stream(archs, smoke: bool) -> dict:
+    """Price a >1e6-op synthetic serving stream (repeated decode-step
+    blocks) through the lazy path — the dense (ops × 16) matrix is never
+    built.  Bit-equality with dense costing is checked on a small prefix."""
+    base = _serving_trace_16b(8, 16, 16, 4)          # one block of traffic
+    repeats = 8 if smoke else (1_000_000 // base.n_ops + 1)
+
+    def blocks():
+        for _ in range(repeats):
+            yield base
+
+    stream = TraceStream(blocks, meta={"what": "synthetic-serving"})
+    n_ops = repeats * base.n_ops
+    t0 = time.perf_counter()
+    totals = cost_many(archs, stream, block_ops=STREAM_BLOCK_OPS)
+    stream_s = time.perf_counter() - t0
+    one = cost_many(archs, base)
+    linear = all(t.total_cycles == repeats * o.total_cycles
+                 for t, o in zip(totals, one))
+    return {
+        "workload": "stream_synthetic_serving", "n_ops": n_ops,
+        "n_archs": len(archs), "blocks": repeats,
+        "block_ops": STREAM_BLOCK_OPS, "stream_s": round(stream_s, 4),
+        "ops_per_s": int(n_ops / stream_s),
+        "prefix_bit_equal": bool(linear),
+        "total_cycles_16B": totals[[a.name for a in archs].index(
+            "16B")].total_cycles,
+    }
+
+
+def rows(smoke: bool = False) -> list:
+    archs = [_arch.resolve(n) for n in ARCH_NAMES]
+    out = [bench_case(name, trace, archs) for name, trace in _cases(smoke)]
+    out.append(bench_million_op_stream(archs, smoke))
+    return out
+
+
+def check(results: list) -> list:
+    """Perf/exactness regression guard (CI: --smoke --check)."""
+    failures = []
+    for r in results:
+        if "speedup_many" in r and r["speedup_many"] < CHECK_SPEEDUP:
+            failures.append(
+                f"{r['workload']}: cost_many only {r['speedup_many']}x the "
+                f"per-arch loop (< {CHECK_SPEEDUP}x)")
+        if r.get("cycles_equal") is False or r.get("prefix_bit_equal") is False:
+            failures.append(f"{r['workload']}: engine not bit-equal to loop")
+    return failures
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    results = rows(smoke=smoke)
+    for r in results:
+        extra = "|".join(f"{k}={v}" for k, v in r.items()
+                         if k not in ("workload",))
+        us = round(r.get("cost_many_s", r.get("stream_s", 0.0)) * 1e6, 1)
+        print(f"cost_{r['workload']},{us},{extra}")
+    payload = {"archs": list(ARCH_NAMES), "smoke": smoke,
+               "block_ops": STREAM_BLOCK_OPS, "results": results}
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {OUT_JSON}")
+    if "--check" in argv:
+        failures = check(results)
+        if failures:
+            for msg in failures:
+                print(f"# CHECK FAILED: {msg}", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"# check OK: batched >= {CHECK_SPEEDUP}x loop everywhere, "
+              f"bit-equal")
+
+
+if __name__ == "__main__":
+    main()

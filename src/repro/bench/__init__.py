@@ -7,11 +7,11 @@ transpose/FFT builders) or per-architecture trace lowerings
 (``TraceWorkload`` — paged-KV serving traffic).  See runner.py for the API
 and workloads.py for the builders.
 """
-from repro.bench.runner import (TraceWorkload, Workload, run_cell, sweep,
-                                verify_workload)
+from repro.bench.runner import (TraceWorkload, Workload, run_cell, run_cells,
+                                sweep, verify_workload)
 from repro.bench.workloads import (fft_workload, serving_workload,
                                    transpose_workload)
 
-__all__ = ["Workload", "TraceWorkload", "run_cell", "sweep",
+__all__ = ["Workload", "TraceWorkload", "run_cell", "run_cells", "sweep",
            "verify_workload", "fft_workload", "transpose_workload",
            "serving_workload"]

@@ -12,6 +12,10 @@ formatters in ``benchmarks/``.
 
 Architectures may be given as ``MemoryArchitecture`` objects, ``MemSpec``
 values, or registry names ("16B-offset", "32B-xor", ...).
+
+Timing-only cells batch through ``repro.core.cost_engine.cost_many``: each
+workload's trace lowering is priced against *all* its architectures in one
+fused device pass (``run_cells``), not one ``arch.cost`` call per cell.
 """
 from __future__ import annotations
 
@@ -58,12 +62,20 @@ class TraceWorkload:
     placement (and therefore address stream) depends on the architecture's
     bank map, so the trace is re-lowered per sweep cell.
 
-    ``trace_fn(arch) -> AddressTrace``; lowerings are cached per
-    architecture name (one trace serves exhaustive *and* hillclimb visits).
+    ``trace_fn(arch) -> AddressTrace``.  Lowerings are cached — and batched
+    sweeps grouped — by ``lowering_key(arch)``; the default key is the full
+    ``MemSpec``, so two space points that merely share a display name never
+    share a trace.  Pass a coarser key when the lowering only depends on
+    part of the spec (``serving_workload`` keys on the banked layout, which
+    lets every multi-port point share the canonical pool's stream).
     """
     name: str
     trace_fn: Callable
     meta: dict = field(default_factory=dict)
+    lowering_key: Callable | None = None
+
+    def _key(self, a: MemoryArchitecture):
+        return self.lowering_key(a) if self.lowering_key else a.spec
 
     def trace(self, arch):
         a = _arch.resolve(arch)
@@ -71,13 +83,36 @@ class TraceWorkload:
         if cache is None:
             cache = {}
             object.__setattr__(self, "_traces", cache)
-        if a.name not in cache:
-            cache[a.name] = self.trace_fn(a)
-        return cache[a.name]
+        key = self._key(a)
+        if key not in cache:
+            cache[key] = self.trace_fn(a)
+        return cache[key]
 
 
 def _nan_to_blank(x: float) -> float | str:
     return "" if math.isnan(x) else x
+
+
+def _record(workload, a: MemoryArchitecture, c) -> dict:
+    """One tidy sweep record from a costed cell."""
+    rec = {
+        "workload": workload.name,
+        "arch": a.name,
+        "kind": a.spec.kind,
+        "fmax_mhz": a.fmax_mhz,
+        "load_cycles": c.load_cycles,
+        "store_cycles": c.store_cycles,
+        "tw_load_cycles": c.tw_load_cycles,
+        "compute_cycles": c.compute_cycles,
+        "total_cycles": c.total_cycles,
+        "time_us": c.time_us(a.fmax_mhz),
+        "fp_ops": c.fp_ops,
+        "r_bank_eff": _nan_to_blank(c.read_bank_eff()),
+        "w_bank_eff": _nan_to_blank(c.write_bank_eff()),
+        "tw_bank_eff": _nan_to_blank(c.tw_bank_eff()),
+    }
+    rec.update(workload.meta)
+    return rec
 
 
 def run_cell(arch, workload, execute: bool = False) -> dict:
@@ -99,35 +134,49 @@ def run_cell(arch, workload, execute: bool = False) -> dict:
                           execute=True).cost
     else:
         c = a.cost(workload.trace())
-    rec = {
-        "workload": workload.name,
-        "arch": a.name,
-        "kind": a.spec.kind,
-        "fmax_mhz": a.fmax_mhz,
-        "load_cycles": c.load_cycles,
-        "store_cycles": c.store_cycles,
-        "tw_load_cycles": c.tw_load_cycles,
-        "compute_cycles": c.compute_cycles,
-        "total_cycles": c.total_cycles,
-        "time_us": c.time_us(a.fmax_mhz),
-        "fp_ops": c.fp_ops,
-        "r_bank_eff": _nan_to_blank(c.read_bank_eff()),
-        "w_bank_eff": _nan_to_blank(c.write_bank_eff()),
-        "tw_bank_eff": _nan_to_blank(c.tw_bank_eff()),
-    }
-    rec.update(workload.meta)
-    return rec
+    return _record(workload, a, c)
+
+
+def run_cells(archs: Iterable, workload) -> list[dict]:
+    """Cost one workload under many architectures in as few fused passes as
+    possible (one ``cost_many`` call per trace lowering).
+
+    A ``Workload``'s trace is architecture-independent: one lowering, one
+    device pass for the whole row.  A ``TraceWorkload`` groups its
+    architectures by ``lowering_key`` and prices each group's shared trace
+    against all of the group's cells at once.  Records come back in input
+    architecture order (timing-only — use ``run_cell(execute=True)`` for
+    functional runs).
+    """
+    from repro.core.cost_engine import cost_many
+    arch_objs = [_arch.resolve(a) for a in archs]
+    if isinstance(workload, TraceWorkload):
+        groups: dict = {}
+        for i, a in enumerate(arch_objs):
+            groups.setdefault(workload._key(a), []).append(i)
+        records: list = [None] * len(arch_objs)
+        for idxs in groups.values():
+            trace = workload.trace(arch_objs[idxs[0]])
+            costs = cost_many([arch_objs[i] for i in idxs], trace)
+            for i, c in zip(idxs, costs):
+                records[i] = _record(workload, arch_objs[i], c)
+        return records
+    costs = cost_many(arch_objs, workload.trace())
+    return [_record(workload, a, c) for a, c in zip(arch_objs, costs)]
 
 
 def sweep(archs: Iterable, workloads: Sequence[Workload] | Workload,
           execute: bool = False) -> list[dict]:
     """Cost every (workload × architecture) cell, workload-major (the order
-    the paper's tables print in)."""
+    the paper's tables print in).  Timing-only sweeps price each workload's
+    cached trace against all cells in one batched engine pass."""
     if isinstance(workloads, (Workload, TraceWorkload)):
         workloads = [workloads]
     archs = [_arch.resolve(a) for a in archs]
-    return [run_cell(a, w, execute=execute)
-            for w in workloads for a in archs]
+    if execute:
+        return [run_cell(a, w, execute=True)
+                for w in workloads for a in archs]
+    return [rec for w in workloads for rec in run_cells(archs, w)]
 
 
 def verify_workload(workload: Workload,

@@ -62,6 +62,11 @@ def serving_workload(batch: int = 4, prompt_len: int = 32,
     conflicts it causes — are a property of the (architecture, traffic)
     pair, exactly like the live ``ServeEngine``'s recorded step traces
     (``repro.serving.simulate_serving_trace`` is the shared lowering).
+
+    The lowering only depends on the architecture's *banked layout* (every
+    layout-free memory prices the canonical 16-bank LSB pool's stream), so
+    that is the ``lowering_key`` — batched sweeps lower once per distinct
+    layout and price each group's cells in one fused engine pass.
     """
     from repro.serving.kvcache import simulate_serving_trace
 
@@ -71,9 +76,15 @@ def serving_workload(batch: int = 4, prompt_len: int = 32,
             decode_steps=decode_steps, page_len=page_len,
             n_kv_layers=n_kv_layers)
 
+    def lowering_key(arch):
+        lay = arch.layout
+        return ("dense-canonical" if lay is None
+                else (lay.n_banks, lay.mapping, lay.shift))
+
     return TraceWorkload(
         name=name or f"serve_b{batch}_p{prompt_len}_d{decode_steps}",
         trace_fn=trace_fn,
         meta={"batch": batch, "prompt_len": prompt_len,
               "decode_steps": decode_steps, "page_len": page_len,
-              "n_kv_layers": n_kv_layers})
+              "n_kv_layers": n_kv_layers},
+        lowering_key=lowering_key)

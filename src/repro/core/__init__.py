@@ -17,10 +17,12 @@ from repro.core.memsim import (LANES, PAPER_MEMORIES, TRANSPOSE_MEMORIES,
                                MemSpec, Memory, TraceCost, banked, cost_trace,
                                instruction_cycles, multiport,
                                op_conflict_cycles)
-from repro.core import arch, cost
+from repro.core import arch, cost, cost_engine
 from repro.core.arch import (PAPER_ARCHITECTURES, TRANSPOSE_ARCHITECTURES,
                              BankedLayout, BankedMemory, MemoryArchitecture,
                              MultiPortMemory)
+from repro.core.cost_engine import cost_many, lower_archs
+from repro.core.trace import AddressTrace, TraceStream
 
 __all__ = [
     "BANK_MAPS", "bank_of", "get_bank_map",
@@ -35,4 +37,5 @@ __all__ = [
     "op_conflict_cycles", "cost",
     "arch", "MemoryArchitecture", "BankedMemory", "MultiPortMemory",
     "BankedLayout", "PAPER_ARCHITECTURES", "TRANSPOSE_ARCHITECTURES",
+    "cost_engine", "cost_many", "lower_archs", "AddressTrace", "TraceStream",
 ]

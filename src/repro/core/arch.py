@@ -130,12 +130,17 @@ class BankedLayout:
                                self.mapping, self.shift)
 
     def physical_rows(self, n_rows: int) -> Array:
-        """All logical rows' physical positions: a permutation of arange."""
+        """All logical rows' physical positions: a permutation of arange.
+
+        Cached per (layout, n_rows): the table is rebuilt from pure layout
+        parameters, so repeated ``to_banked`` / ``from_banked`` / allocator
+        layout queries reuse one materialization instead of re-running the
+        arange + map arithmetic every call."""
         if n_rows % self.n_banks:
             raise ValueError(f"n_rows={n_rows} not divisible by "
                              f"{self.n_banks} banks")
-        r = jnp.arange(n_rows, dtype=jnp.int32)
-        return self.physical_row(r, n_rows)
+        return _physical_rows_table(self.n_banks, self.mapping, self.shift,
+                                    n_rows)
 
     def to_banked(self, table: Array) -> Array:
         """Relayout logical-row-major -> bank-major (host-side scatter)."""
@@ -146,6 +151,15 @@ class BankedLayout:
         """Inverse relayout bank-major -> logical-row-major."""
         phys = self.physical_rows(table_banked.shape[0])
         return table_banked[phys]
+
+
+@functools.lru_cache(maxsize=None)
+def _physical_rows_table(n_banks: int, mapping: str, shift: int,
+                         n_rows: int) -> Array:
+    """The materialized logical→physical permutation of one layout (jnp
+    arrays are immutable, so sharing the cached table is safe)."""
+    r = jnp.arange(n_rows, dtype=jnp.int32)
+    return physical_row_of(r, n_banks, n_rows // n_banks, mapping, shift)
 
 
 # --------------------------------------------------------------------------
@@ -201,15 +215,27 @@ class MemoryArchitecture:
         cyc = int(self.op_cycles(jnp.asarray(addrs), mask, is_write).sum())
         return cyc + self._instruction_overhead(is_write)
 
-    def cost(self, addr_trace) -> TraceCost:
-        """Cost an ``AddressTrace`` under this architecture's timing model.
+    def cost(self, addr_trace, block_ops: int | None = None) -> TraceCost:
+        """Cost an ``AddressTrace`` (or a lazy ``TraceStream``) under this
+        architecture's timing model.
 
         The single costing entry point of the redesign: kernels' ``trace``
         generators, the ISA VM, the bench sweep runner, and ``repro.tune``
-        all cost the same artifact through here.  Per-op cycles come from
-        ``op_cycles`` (batched over every op of a kind at once); each source
-        instruction pays the per-instruction controller overhead once.
+        all cost the same artifact through here.  Since the batched engine
+        landed this is a thin single-arch shim over
+        ``repro.core.cost_engine.cost_many`` (cycle-bit-equal to the legacy
+        per-kind loop, which survives as ``_cost_loop`` for the perf
+        baseline); ``block_ops`` chunks the trace so million-op streams
+        cost in O(block) memory.
         """
+        from repro.core.cost_engine import cost_many
+        return cost_many([self], addr_trace, block_ops=block_ops)[0]
+
+    def _cost_loop(self, addr_trace) -> TraceCost:
+        """The pre-engine costing path: one ``op_cycles`` batch + one host
+        sync per op kind.  Kept as the independent reference the engine is
+        pinned against (tests/test_cost_engine.py) and the per-arch-loop
+        baseline ``benchmarks/cost_bench.py`` times ``cost_many`` over."""
         from repro.core import trace as tr
         cost = TraceCost(compute_cycles=int(addr_trace.compute_cycles))
         for kind, is_write, cyc_attr, n_attr in (

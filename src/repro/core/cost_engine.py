@@ -1,0 +1,301 @@
+"""Batched streaming cost engine — price a whole architecture list in one
+fused pass, and million-op traces in O(block) memory.
+
+The paper's deliverable is a *comparison* (9 memories × 51 benchmarks), and
+``repro.tune`` generalizes it to searching an ``ArchSpace`` over arbitrary
+traffic.  Pricing each (architecture, trace) cell through
+``MemoryArchitecture.cost`` walks op kinds in Python with a host sync per
+kind — ``len(archs) × 3`` device round-trips per sweep.  But every timing
+model in the comparison is pure element-wise integer arithmetic over a small
+parameter set:
+
+  * banked:      bank = (((a >> sh) ^ (a >> xsh)) + (a >> ash)) & (B-1);
+                 cycles = max per-bank popcount (optionally over distinct
+                 addresses — the broadcast variant)
+  * multi-port:  cycles = ceil(active_lanes / ports); the -VB write path is
+                 the banked formula over 4 pseudo-banks
+
+so the whole lattice lowers to one ``(n_archs, 2 paths, 7)`` int32 parameter
+table (``lower_archs``) and one jitted vmap prices every architecture
+against a trace block simultaneously (``cost_many``) — one device sync
+total.  Blocks come from a dense ``AddressTrace`` (optionally chunked via
+``iter_blocks``) or a lazy ``repro.core.trace.TraceStream``, so costing is
+O(block) in memory and serving traces can exceed 1e6 ops without ever
+materializing the dense (ops × 16) matrix.
+
+Chunked, streamed, and dense costing are bit-equal (pinned in
+tests/test_cost_engine.py): per-op cycles only depend on the op itself, and
+per-instruction controller overheads are charged from instruction ids —
+which block views preserve globally, and stream blocks carry whole.
+
+``MemoryArchitecture.cost`` is a thin single-arch shim over this engine;
+``tune.search``, ``bench.sweep`` and the serving cost path batch through
+``cost_many`` directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import controllers as ctl
+from repro.core.conflicts import first_occurrence
+from repro.core.memsim import LANES, MemSpec, TraceCost
+from repro.core.trace import KIND_LOAD, KIND_STORE, KIND_TW, AddressTrace
+
+__all__ = ["cost_many", "lower_archs", "ArchTable"]
+
+#: shifting an int32 word address by 31 yields 0 (addresses are non-negative)
+#: — the identity element for the generic bank formula's unused terms.
+_NO_SHIFT = 31
+
+#: parameter-table field indices (per architecture, per read/write path)
+_F_BANKED, _F_BMASK, _F_SH, _F_XSH, _F_ASH, _F_UNIQ, _F_PORTS = range(7)
+
+_KINDS = (KIND_LOAD, KIND_STORE, KIND_TW)
+
+
+# --------------------------------------------------------------------------
+# Architecture lowering
+# --------------------------------------------------------------------------
+
+def _map_shifts(mapping: str, n_banks: int, shift: int) -> tuple:
+    """(sh, xsh, ash) such that
+    bank = (((a >> sh) ^ (a >> xsh)) + (a >> ash)) & (B-1)
+    reproduces ``repro.core.bankmap.bank_of`` for every supported map."""
+    log2b = n_banks.bit_length() - 1
+    if mapping == "lsb":
+        return 0, _NO_SHIFT, _NO_SHIFT
+    if mapping == "offset":
+        return shift, _NO_SHIFT, _NO_SHIFT
+    if mapping == "xor":
+        return 0, log2b, _NO_SHIFT
+    if mapping == "fold":
+        return 0, _NO_SHIFT, log2b
+    raise ValueError(f"unknown bank map {mapping!r}")
+
+
+def _spec_paths(spec: MemSpec) -> tuple:
+    """One spec -> ((read path), (write path), (read_ovh, write_ovh))."""
+    if spec.is_banked:
+        sh, xsh, ash = _map_shifts(spec.mapping, spec.n_banks, spec.map_shift)
+        read = (1, spec.n_banks - 1, sh, xsh, ash, int(spec.broadcast), 1)
+        write = (1, spec.n_banks - 1, sh, xsh, ash, 0, 1)
+        return read, write, (ctl.read_overhead(spec.n_banks),
+                             ctl.write_overhead(spec.n_banks))
+    read = (0, 0, _NO_SHIFT, _NO_SHIFT, _NO_SHIFT, 0, spec.read_ports)
+    if spec.vb_write_banks:
+        write = (1, spec.vb_write_banks - 1, 0, _NO_SHIFT, _NO_SHIFT, 0, 1)
+        return read, write, (0, ctl.write_overhead(spec.vb_write_banks))
+    write = (0, 0, _NO_SHIFT, _NO_SHIFT, _NO_SHIFT, 0, spec.write_ports)
+    return read, write, (0, 0)
+
+
+class ArchTable:
+    """A lowered architecture list: the whole lattice as parameter arrays.
+
+    ``params`` is (n_archs, 2, 7) int32 — per arch, a read-path and a
+    write-path row of [use_banked, bank_mask, sh, xsh, ash, use_uniq,
+    ports]; ``overheads`` is (n_archs, 2) per-instruction controller
+    overheads (read, write; twiddle loads are reads); ``need_uniq`` records
+    whether any read path coalesces same-address requests.
+    """
+
+    def __init__(self, specs: tuple):
+        rows, ovhs = [], []
+        for s in specs:
+            read, write, ovh = _spec_paths(s)
+            rows.append((read, write))
+            ovhs.append(ovh)
+        self.specs = specs
+        self.params = np.asarray(rows, np.int32).reshape(len(specs), 2, 7)
+        self.overheads = np.asarray(ovhs, np.int64).reshape(len(specs), 2)
+        self.need_uniq = bool(self.params[:, 0, _F_UNIQ].any())
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+
+@functools.lru_cache(maxsize=None)
+def _lowered(specs: tuple) -> ArchTable:
+    return ArchTable(specs)
+
+
+def lower_archs(archs) -> ArchTable:
+    """Lower a list of architectures (names / specs / objects) to the
+    parameter arrays one fused device pass consumes (cached per spec list)."""
+    from repro.core import arch as _arch
+    return _lowered(tuple(_arch.resolve(a).spec for a in archs))
+
+
+# --------------------------------------------------------------------------
+# The fused block kernel
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("need_uniq",))
+def _block_kind_cycles(params, addrs, mask, kinds, *, need_uniq: bool):
+    """One block, every architecture: (n_archs, 3) per-kind cycle sums.
+
+    addrs (n_ops, LANES) int32, mask (n_ops, LANES) bool, kinds (n_ops,)
+    int32; padded ops carry an all-False mask and cost 0 under every model.
+
+    The banked max-conflict is computed from the lane-pair equality matrix
+    rather than per-bank popcount bins: an active lane's count of same-bank
+    active lanes IS its bank's popcount, so the max over active lanes
+    equals the max over banks — with LANES² (256) int8 cells per op
+    independent of bank count, which XLA:CPU vectorizes ~40× better than a
+    (lanes × banks) one-hot reduction.
+    """
+    is_write = kinds == KIND_STORE
+    active = mask.sum(axis=-1, dtype=jnp.int32)                  # (n_ops,)
+    uniq = (first_occurrence(addrs, mask).astype(bool)
+            if need_uniq else mask)
+
+    def one_arch(p):                                             # p (2, 7)
+        pr = jnp.where(is_write[:, None], p[1], p[0])            # (n_ops, 7)
+        bank = ((((addrs >> pr[:, _F_SH, None])
+                  ^ (addrs >> pr[:, _F_XSH, None]))
+                 + (addrs >> pr[:, _F_ASH, None]))
+                & pr[:, _F_BMASK, None])                         # (n_ops, L)
+        eff = mask & jnp.where(pr[:, _F_UNIQ, None].astype(bool), uniq, True)
+        eq = (bank[:, :, None] == bank[:, None, :]) & eff[:, None, :]
+        cnt = eq.sum(axis=-1, dtype=jnp.int8)                    # (n_ops, L)
+        banked = jnp.where(eff, cnt, 0).max(axis=-1).astype(jnp.int32)
+        ported = (active + pr[:, _F_PORTS] - 1) // pr[:, _F_PORTS]
+        return jnp.where(pr[:, _F_BANKED].astype(bool), banked, ported)
+
+    cyc = jax.vmap(one_arch)(params)                             # (A, n_ops)
+    kind_onehot = (kinds[:, None]
+                   == jnp.asarray(_KINDS, jnp.int32)).astype(jnp.int32)
+    return cyc @ kind_onehot                                     # (A, 3)
+
+
+def _pad_block(t: AddressTrace) -> tuple:
+    """Pad a block to the next power-of-two op count (bounds the number of
+    compiled shapes to log2 variants).  Padded ops are fully inactive."""
+    n = t.n_ops
+    padded = 1 << max(0, n - 1).bit_length()
+    addrs = np.zeros((padded, LANES), np.int32)
+    addrs[:n] = t.addrs
+    mask = np.zeros((padded, LANES), bool)
+    mask[:n] = True if t.mask is None else t.mask
+    kinds = np.zeros((padded,), np.int32)
+    kinds[:n] = t.kinds
+    return addrs, mask, kinds
+
+
+# --------------------------------------------------------------------------
+# cost_many
+# --------------------------------------------------------------------------
+
+#: fold device partials into the int64 host accumulator every N blocks —
+#: keeps the dispatch queue bounded without a per-block sync
+_FOLD_EVERY = 256
+
+
+def _fold(totals, partials: list, n_archs: int) -> np.ndarray:
+    if totals is None:
+        totals = np.zeros((n_archs, 3), np.int64)
+    for p in partials:
+        totals += np.asarray(p, np.int64)
+    partials.clear()
+    return totals
+
+
+def _instr_counts(t: AddressTrace) -> np.ndarray:
+    """(3,) distinct-instruction count per kind (ids are global within one
+    trace, so counting once per source trace is boundary-safe)."""
+    out = np.zeros(3, np.int64)
+    for i, kind in enumerate(_KINDS):
+        sel = t.kinds == kind
+        if sel.any():
+            out[i] = np.unique(t.instr[sel]).size
+    return out
+
+
+def cost_many(archs, trace, block_ops: int | None = None) -> list[TraceCost]:
+    """Price every architecture of ``archs`` against one trace in a single
+    fused computation (one device sync total, not ``len(archs) × 3``).
+
+    ``trace`` is a dense ``AddressTrace``, a lazy ``TraceStream``, or any
+    iterable of ``AddressTrace`` blocks (whole-instruction blocks, as
+    ``TraceStream`` documents).  ``block_ops`` additionally chunks each
+    source trace into at-most-``block_ops``-op pieces, bounding peak memory;
+    dense, chunked, and streamed costing are bit-equal.
+
+    Returns one ``TraceCost`` per architecture, in input order — exactly
+    what ``arch.cost(trace)`` returns for each (``MemoryArchitecture.cost``
+    is the single-arch shim over this function).
+    """
+    from repro.core import arch as _arch
+    arch_objs = [_arch.resolve(a) for a in archs]
+    if not arch_objs:
+        return []
+    table = _lowered(tuple(a.spec for a in arch_objs))
+    params = jnp.asarray(table.params)
+
+    partials: list = []    # per-block (A, 3) int32 device arrays; summed in
+    # int64 on the host (folded every _FOLD_EVERY blocks for dispatch-queue
+    # backpressure), so totals cannot overflow int32 across blocks (within
+    # one block sums are bounded by block_ops × LANES)
+    totals = None
+    n_instr = np.zeros(3, np.int64)
+    n_ops = np.zeros(3, np.int64)
+    compute_cycles = 0
+    op_counts: dict = {}
+
+    is_stream = not isinstance(trace, AddressTrace)
+    sources = trace if is_stream else [trace]
+    for src in sources:
+        if is_stream and src.meta.get("_block_view"):
+            raise ValueError(
+                "stream sources must be independent whole-instruction "
+                "traces, but got AddressTrace.iter_blocks views (they share "
+                "instruction ids with their parent and carry no compute "
+                "metadata — overheads would be double-charged at block "
+                "boundaries); pass the parent trace with block_ops=… "
+                "instead")
+        compute_cycles += src.compute_cycles
+        for k, v in src.op_counts.items():
+            op_counts[k] = op_counts.get(k, 0) + v
+        if not src.n_ops:
+            continue
+        n_instr += _instr_counts(src)
+        for i, kind in enumerate(_KINDS):
+            n_ops[i] += int((src.kinds == kind).sum())
+        blocks = (src.iter_blocks(block_ops)
+                  if block_ops is not None and src.n_ops > block_ops
+                  else (src,))
+        for blk in blocks:
+            addrs, mask, kinds = _pad_block(blk)
+            partials.append(_block_kind_cycles(
+                params, jnp.asarray(addrs), jnp.asarray(mask),
+                jnp.asarray(kinds), need_uniq=table.need_uniq))
+            if len(partials) >= _FOLD_EVERY:
+                totals = _fold(totals, partials, len(arch_objs))
+
+    totals = _fold(totals, partials, len(arch_objs))
+
+    costs = []
+    for i in range(len(arch_objs)):
+        r_ovh, w_ovh = (int(table.overheads[i, 0]),
+                        int(table.overheads[i, 1]))
+        kind_cycles = {
+            KIND_LOAD: int(totals[i, 0]) + int(n_instr[0]) * r_ovh,
+            KIND_STORE: int(totals[i, 1]) + int(n_instr[1]) * w_ovh,
+            KIND_TW: int(totals[i, 2]) + int(n_instr[2]) * r_ovh,
+        }
+        costs.append(TraceCost(
+            load_cycles=kind_cycles[KIND_LOAD] if n_ops[0] else 0,
+            store_cycles=kind_cycles[KIND_STORE] if n_ops[1] else 0,
+            tw_load_cycles=kind_cycles[KIND_TW] if n_ops[2] else 0,
+            compute_cycles=int(compute_cycles),
+            n_load_ops=int(n_ops[0]), n_store_ops=int(n_ops[1]),
+            n_tw_ops=int(n_ops[2]),
+            fp_ops=int(op_counts.get("fp", 0)),
+            int_ops=int(op_counts.get("int", 0)),
+            imm_ops=int(op_counts.get("imm", 0)),
+            other_ops=int(op_counts.get("other", 0))))
+    return costs

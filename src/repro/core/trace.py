@@ -46,7 +46,7 @@ import numpy as np
 
 from repro.core.memsim import LANES
 
-__all__ = ["AddressTrace", "TraceBuilder", "as_ops",
+__all__ = ["AddressTrace", "TraceBuilder", "TraceStream", "as_ops",
            "KIND_LOAD", "KIND_STORE", "KIND_TW", "LANES"]
 
 KIND_LOAD, KIND_STORE, KIND_TW = 0, 1, 2
@@ -228,6 +228,25 @@ class AddressTrace:
             raise TypeError("AddressTrace slices over op ranges only")
         return self._select(item)
 
+    def iter_blocks(self, block_ops: int):
+        """Iterate the trace as ``block_ops``-sized op blocks (the last one
+        ragged).  Blocks are views keeping the *global* instruction ids, so
+        an instruction cut by a block boundary stays one instruction.
+
+        This is the chunking mechanism behind ``cost_many(trace,
+        block_ops=…)``, which charges per-instruction overheads (and the
+        compute metadata this trace carries) once from the parent — that
+        path is bit-equal to dense costing at any block size.  Do NOT feed
+        the raw iterator to ``cost_many`` as if it were a ``TraceStream``:
+        stream sources are independent whole-instruction traces, while
+        these views share ids with their parent and carry no compute."""
+        if block_ops <= 0:
+            raise ValueError(f"block_ops must be positive, got {block_ops}")
+        for start in range(0, self.n_ops, block_ops):
+            blk = self._select(slice(start, start + block_ops))
+            blk.meta["_block_view"] = True    # cost_many rejects these as
+            yield blk                         # stream sources (see above)
+
     def with_compute(self, compute_cycles: int,
                      op_counts: dict | None = None) -> "AddressTrace":
         return AddressTrace(self.addrs, self.kinds, self.instr, self.mask,
@@ -274,3 +293,40 @@ class TraceBuilder:
         if meta:
             t.meta.update(meta)
         return t
+
+
+class TraceStream:
+    """A lazy sequence of ``AddressTrace`` blocks — the streaming counterpart
+    of one big concatenated trace.
+
+    Costing a stream through ``repro.core.cost_engine.cost_many`` is
+    bit-equal to costing ``AddressTrace.concat(*blocks)`` but touches one
+    block at a time, so a >1e6-op serving trace never materializes its dense
+    (ops × 16) matrix.  The contract mirrors ``concat``'s accounting: each
+    yielded block is a whole number of instructions (every block's
+    instructions are distinct from every other block's), and per-block
+    ``compute_cycles`` / ``op_counts`` sum.
+
+    ``blocks`` is either an iterable of traces or a zero-arg callable
+    returning a fresh iterator — pass a callable (e.g. a generator function)
+    when the stream must be re-iterable or when blocks should be produced
+    on demand rather than held alive.
+    """
+
+    def __init__(self, blocks, meta: dict | None = None):
+        self._blocks = blocks
+        self.meta = dict(meta or {})
+
+    def __iter__(self):
+        blocks = self._blocks() if callable(self._blocks) else self._blocks
+        return iter(blocks)
+
+    def materialize(self) -> AddressTrace:
+        """Concatenate the whole stream into one dense trace (for tests and
+        small streams; defeats the purpose for >1e6-op traffic)."""
+        t = AddressTrace.concat(*self)
+        t.meta.update(self.meta)
+        return t
+
+    def __repr__(self) -> str:
+        return f"TraceStream(meta={self.meta})"

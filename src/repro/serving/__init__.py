@@ -21,6 +21,7 @@ from repro.serving.kvcache import (PagedKVConfig, PagedKVState,
                                    decode_step_trace, gather_kv,
                                    gather_pages, init_pages, init_state,
                                    pool_pages, prefill_trace, scatter_pages,
+                                   simulate_serving_stream,
                                    simulate_serving_trace)
 
 __all__ = [
@@ -30,4 +31,5 @@ __all__ = [
     "append_token", "gather_kv", "bank_load_stats",
     "gather_pages", "scatter_pages",
     "decode_step_trace", "prefill_trace", "simulate_serving_trace",
+    "simulate_serving_stream",
 ]

@@ -319,10 +319,40 @@ class ServeEngine:
         """The last generation's full KV ``AddressTrace`` (prefill page
         writes + every decode step), one costed artifact."""
         from repro.core.trace import AddressTrace
+        return AddressTrace.concat(*self._trace_chunks(include_prefill))
+
+    def serving_stream(self, include_prefill: bool = True):
+        """The last generation's KV traffic as a lazy
+        ``repro.core.trace.TraceStream`` of per-step blocks — the input the
+        batched cost engine consumes in O(block) memory (long generations
+        never concatenate into one dense matrix)."""
+        from repro.core.trace import TraceStream
+        chunks = self._trace_chunks(include_prefill)
+        return TraceStream(lambda: iter(chunks),
+                           meta={"what": "serving-live",
+                                 "arch": self.mem_arch.name,
+                                 "steps": len(self._step_traces)})
+
+    def serving_cost(self, archs=None, include_prefill: bool = True,
+                     block_ops: int | None = None):
+        """Price the last generation's serving traffic — through the
+        streaming engine path, against one or many architectures at once.
+
+        ``archs`` defaults to this engine's ``mem_arch`` (returns a single
+        ``TraceCost``); a list prices the whole comparison in one fused
+        ``cost_many`` pass and returns one ``TraceCost`` per entry."""
+        from repro.core.cost_engine import cost_many
+        stream = self.serving_stream(include_prefill)
+        if archs is None:
+            return cost_many([self.mem_arch], stream,
+                             block_ops=block_ops)[0]
+        return cost_many(list(archs), stream, block_ops=block_ops)
+
+    def _trace_chunks(self, include_prefill: bool) -> list:
         chunks = list(self._step_traces)
         if include_prefill and self._prefill_trace is not None:
             chunks = [self._prefill_trace] + chunks
         if not chunks:
             raise RuntimeError(
                 "no traces recorded; run generate() with kv_mode='paged'")
-        return AddressTrace.concat(*chunks)
+        return chunks

@@ -51,7 +51,7 @@ __all__ = [
     "append_token", "gather_kv", "bank_load_stats",
     "pool_rows", "gather_pages", "scatter_pages",
     "kv_read_stream", "decode_step_trace", "prefill_trace",
-    "simulate_serving_trace",
+    "simulate_serving_trace", "simulate_serving_stream",
 ]
 
 
@@ -359,21 +359,28 @@ def prefill_trace(cfg: PagedKVConfig, page_table, prompt_len: int,
     return t
 
 
-def simulate_serving_trace(arch, batch: int, prompt_len: int,
-                           decode_steps: int, page_len: int = 8,
-                           n_kv_layers: int = 1, max_seq: int | None = None,
-                           include_prefill: bool = True):
-    """The full serving ``AddressTrace`` of a (batch, context) point without
-    running a model: prefill page writes + ``decode_steps`` decode steps,
-    with pages allocated by the same arbiter the live engine uses.
+def simulate_serving_stream(arch, batch: int, prompt_len: int,
+                            decode_steps: int, page_len: int = 8,
+                            n_kv_layers: int = 1, max_seq: int | None = None,
+                            include_prefill: bool = True):
+    """The serving traffic of a (batch, context) point as a lazy
+    ``repro.core.trace.TraceStream``: one block per prefill ingest / decode
+    step, produced on demand with pages allocated by the same arbiter the
+    live engine uses.
 
-    The trace is architecture-DEPENDENT (the allocator places pages per the
-    arch's bank map), which is why ``bench.TraceWorkload`` re-lowers it per
-    sweep cell.  Non-banked architectures price the canonical 16-bank LSB
-    pool's stream (multi-port issue cost depends only on lane activity).
+    This is the O(block)-memory lowering — ``cost_many(archs, stream)``
+    prices million-op serving traces without ever materializing the dense
+    (ops × 16) matrix that ``simulate_serving_trace`` (the concatenation of
+    this stream) builds.  The stream is re-iterable: each iteration replays
+    the allocator from scratch, so blocks need not be held alive.
+
+    The traffic is architecture-DEPENDENT (the allocator places pages per
+    the arch's bank map), which is why ``bench.TraceWorkload`` re-lowers it
+    per sweep cell.  Non-banked architectures price the canonical 16-bank
+    LSB pool's stream (multi-port issue cost depends only on lane activity).
     """
     from repro.core import arch as _arch
-    from repro.core.trace import AddressTrace
+    from repro.core.trace import TraceStream
     a = _arch.resolve(arch)
     max_seq = max_seq or (prompt_len + decode_steps)
     if a.layout is not None:
@@ -385,27 +392,42 @@ def simulate_serving_trace(arch, batch: int, prompt_len: int,
             n_pages=pool_pages(16, batch, max_seq, page_len),
             page_len=page_len, n_banks=16, mapping="lsb", kv_heads=1,
             head_dim=1, map_shift=1)
-    state = init_pages(cfg, batch, max_seq)
-    ones = jnp.ones((batch,), bool)
-    for p in range(-(-prompt_len // page_len)):         # prompt pages
+
+    def blocks():
+        state = init_pages(cfg, batch, max_seq)
+        ones = jnp.ones((batch,), bool)
+        for p in range(-(-prompt_len // page_len)):     # prompt pages
+            state = state._replace(
+                seq_lens=jnp.full((batch,), p * page_len, jnp.int32))
+            state, _ = allocate_pages(cfg, state, ones)
         state = state._replace(
-            seq_lens=jnp.full((batch,), p * page_len, jnp.int32))
-        state, _ = allocate_pages(cfg, state, ones)
-    state = state._replace(
-        seq_lens=jnp.full((batch,), prompt_len, jnp.int32))
-    chunks = []
-    if include_prefill:
-        chunks.append(prefill_trace(cfg, state.page_table, prompt_len,
-                                    n_kv_layers))
-    for i in range(decode_steps):                       # decode appends
-        pos = prompt_len + i
-        need = (state.seq_lens % page_len) == 0
-        state, _ = allocate_pages(cfg, state, need)
-        chunks.append(decode_step_trace(cfg, state.page_table, pos,
-                                        n_kv_layers))
-        state = state._replace(seq_lens=state.seq_lens + 1)
-    t = AddressTrace.concat(*chunks)
-    t.meta.update({"what": "serving", "arch": a.name, "batch": batch,
-                   "prompt_len": prompt_len, "decode_steps": decode_steps,
-                   "page_len": page_len, "n_kv_layers": n_kv_layers})
-    return t
+            seq_lens=jnp.full((batch,), prompt_len, jnp.int32))
+        if include_prefill:
+            yield prefill_trace(cfg, state.page_table, prompt_len,
+                                n_kv_layers)
+        for i in range(decode_steps):                   # decode appends
+            pos = prompt_len + i
+            need = (state.seq_lens % page_len) == 0
+            state, _ = allocate_pages(cfg, state, need)
+            yield decode_step_trace(cfg, state.page_table, pos,
+                                    n_kv_layers)
+            state = state._replace(seq_lens=state.seq_lens + 1)
+
+    return TraceStream(blocks, meta={
+        "what": "serving", "arch": a.name, "batch": batch,
+        "prompt_len": prompt_len, "decode_steps": decode_steps,
+        "page_len": page_len, "n_kv_layers": n_kv_layers})
+
+
+def simulate_serving_trace(arch, batch: int, prompt_len: int,
+                           decode_steps: int, page_len: int = 8,
+                           n_kv_layers: int = 1, max_seq: int | None = None,
+                           include_prefill: bool = True):
+    """The full serving ``AddressTrace`` of a (batch, context) point without
+    running a model: prefill page writes + ``decode_steps`` decode steps —
+    the dense concatenation of ``simulate_serving_stream`` (use the stream
+    directly for traces too big to materialize)."""
+    return simulate_serving_stream(
+        arch, batch, prompt_len, decode_steps, page_len=page_len,
+        n_kv_layers=n_kv_layers, max_seq=max_seq,
+        include_prefill=include_prefill).materialize()

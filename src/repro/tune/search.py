@@ -18,10 +18,13 @@ Workloads come in three forms:
 Strategies:
 
   * ``"exhaustive"`` — cost every point of the space (the paper's own
-    methodology: all 9 memories × every benchmark);
+    methodology: all 9 memories × every benchmark), priced in ONE fused
+    ``repro.core.cost_engine.cost_many`` pass per trace lowering rather
+    than a per-architecture Python loop;
   * ``"hillclimb"``  — greedy walk of the banked lattice (bank count
     doubling/halving, bank-map switch, broadcast toggle) from a deterministic
-    start, with the (≤3) multi-port points always evaluated outright.  Finds
+    start, with the (≤3) multi-port points always evaluated outright.  Each
+    neighborhood is batched through the engine as one pass.  Finds
     the same winners on the paper workloads in a fraction of the
     evaluations; every evaluated point is returned, ranked.
 
@@ -34,7 +37,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.bench.runner import TraceWorkload, Workload, run_cell
+from repro.bench.runner import TraceWorkload, Workload, run_cells
 from repro.core import arch as _arch
 
 
@@ -123,12 +126,14 @@ def _objective_fn(objective, capacity_kb):
 
 
 def _evaluator(kernel, workload):
-    """(kernel, workload) -> name -> tidy record."""
+    """(kernel, workload) -> batched evaluator: names -> list of tidy
+    records (one fused ``cost_many`` pass per trace lowering — the engine
+    prices a whole neighborhood / space at once)."""
     if isinstance(workload, (Workload, TraceWorkload)):
         # TraceWorkloads (e.g. serving traffic) re-lower per architecture —
-        # the page allocator follows the arch's bank map — and cache per
-        # name inside the workload, so revisits stay free.
-        return lambda name: run_cell(name, workload)
+        # the page allocator follows the arch's bank map — grouped and
+        # cached by lowering key inside run_cells, so revisits stay free.
+        return lambda names: run_cells(names, workload)
     if kernel is None:
         raise ValueError("pass a bench.Workload / bench.TraceWorkload, or a "
                          "kernel plus its call args as `workload`")
@@ -140,16 +145,18 @@ def _evaluator(kernel, workload):
     cached = []   # AddressTraces are logical-address streams, architecture-
     # independent by design — generate once, cost under every point
 
-    def ev(name: str) -> dict:
-        a = _arch.resolve(name)
+    def ev_many(names) -> list:
+        from repro.core.cost_engine import cost_many
+        arch_objs = [_arch.resolve(n) for n in names]
         if not cached:
-            cached.append(kernel.address_trace(a, *args))
-        c = a.cost(cached[0])
-        return {"workload": kernel.name, "arch": a.name,
-                "kind": a.spec.kind, "fmax_mhz": a.fmax_mhz,
-                "total_cycles": c.total_cycles,
-                "time_us": c.time_us(a.fmax_mhz)}
-    return ev
+            cached.append(kernel.address_trace(arch_objs[0], *args))
+        costs = cost_many(arch_objs, cached[0])
+        return [{"workload": kernel.name, "arch": a.name,
+                 "kind": a.spec.kind, "fmax_mhz": a.fmax_mhz,
+                 "total_cycles": c.total_cycles,
+                 "time_us": c.time_us(a.fmax_mhz)}
+                for a, c in zip(arch_objs, costs)]
+    return ev_many
 
 
 def search(kernel=None, workload=None, space: ArchSpace | None = None,
@@ -163,31 +170,36 @@ def search(kernel=None, workload=None, space: ArchSpace | None = None,
     """
     space = space or PAPER_SPACE
     obj = _objective_fn(objective, capacity_kb)
-    ev = _evaluator(kernel, workload)
+    ev_many = _evaluator(kernel, workload)
 
     results: dict = {}
 
-    def visit(name: str) -> "TuneResult":
-        if name not in results:
-            rec = ev(name)
+    def visit_many(names) -> None:
+        """Evaluate every not-yet-visited name in one fused engine pass
+        (exhaustive = the whole space at once; hillclimb = one batch per
+        neighborhood)."""
+        fresh = [n for n in dict.fromkeys(names) if n not in results]
+        if not fresh:
+            return
+        for name, rec in zip(fresh, ev_many(fresh)):
             a = _arch.resolve(name)
             results[name] = TuneResult(
                 arch=name, total_cycles=int(rec["total_cycles"]),
                 time_us=float(rec["time_us"]),
                 objective=float(obj(rec, a)), record=rec)
-        return results[name]
 
     if strategy == "exhaustive":
-        for name in space.names():
-            visit(name)
+        visit_many(space.names())
     elif strategy == "hillclimb":
-        for name in space.multiports:     # few points; always evaluated
-            visit(name)
         point = space.start_point()
-        best = visit(space.banked_name(*point))
+        # few multi-port points (always evaluated) + the start: one batch
+        visit_many(list(space.multiports) + [space.banked_name(*point)])
+        best = results[space.banked_name(*point)]
         while True:
-            moves = [(visit(space.banked_name(*p)), p)
-                     for p in space.neighbors(point)]
+            neighborhood = space.neighbors(point)
+            visit_many([space.banked_name(*p) for p in neighborhood])
+            moves = [(results[space.banked_name(*p)], p)
+                     for p in neighborhood]
             better = [(r, p) for r, p in moves
                       if (r.objective, r.arch) < (best.objective, best.arch)]
             if not better:
