@@ -13,12 +13,24 @@ For each workload trace three costing paths are timed against the default
 
 All three are verified bit-identical before timing.  The streaming case
 additionally prices a >1e6-op synthetic serving stream that is never
-materialized densely.  Results go to ``BENCH_cost.json`` at the repo root.
+materialized densely.
+
+A trace-CONSTRUCTION section (``construct_*`` rows) times the streaming
+pipeline's other half: building the transpose program trace dense
+(``AddressTrace.from_program`` — every per-block address vector alive at
+once) vs streaming it (``instr_trace_blocks`` over the lazy macro-op
+iterator — one block alive at a time), with host peak memory measured via
+``tracemalloc``.  The full run lowers AND costs a >1e6-op transpose stream
+whose peak stays below the (ops × 16) int32 matrix it never builds.
+Results go to ``BENCH_cost.json`` at the repo root.
 
 CSV: name,us_per_call,derived (speedups | cycles checksum).
 ``--smoke`` runs the small points only (CI); ``--check`` exits non-zero if
 the batched path is not at least ``CHECK_SPEEDUP``× the loop anywhere (a
-soft perf-regression guard; the threshold is generous to absorb CI noise).
+soft perf-regression guard; the threshold is generous to absorb CI noise),
+if any path is not bit-equal — including streamed vs dense CONSTRUCTION —
+or if a peak-gated construction row materialized more than the dense
+matrix it claims to avoid.
 """
 from __future__ import annotations
 
@@ -26,6 +38,7 @@ import json
 import os
 import sys
 import time
+import tracemalloc
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
@@ -127,10 +140,90 @@ def bench_million_op_stream(archs, smoke: bool) -> dict:
     }
 
 
+def _peak_bytes(fn) -> int:
+    """Host-side (tracemalloc) peak bytes allocated while running ``fn`` —
+    numpy buffers included; device buffers are not host construction."""
+    tracemalloc.start()
+    try:
+        fn()
+        return tracemalloc.get_traced_memory()[1]
+    finally:
+        tracemalloc.stop()
+
+
+def bench_construction(n: int, with_dense: bool) -> dict:
+    """Trace-CONSTRUCTION throughput on the N×N transpose stream: build +
+    lower + cost under 16B, dense (``AddressTrace.from_program`` of the
+    whole program) vs streamed (``instr_trace_blocks`` over the lazy
+    macro-op iterator, one block alive at a time).
+
+    ``with_dense=False`` rows are the million-op class where the dense
+    build is pointless to time — they record the streamed peak against
+    ``dense_matrix_bytes``, the (ops × 16) int32 matrix that was never
+    materialized (``peak_gated`` rows fail --check if it ever is)."""
+    from repro.core.cost_engine import cost_many as _cm
+    from repro.core.trace import TraceStream
+    from repro.isa.programs.transpose import (iter_transpose_instrs,
+                                              transpose_n_threads,
+                                              transpose_program)
+    from repro.isa.vm import program_trace
+    a16 = _arch.resolve("16B")
+    n_ops = 2 * n * n // 16        # the load + store op streams
+
+    def build_stream():
+        s = TraceStream(lambda: instr_trace_blocks_local())
+        return _cm([a16], s, block_ops=STREAM_BLOCK_OPS)[0]
+
+    def instr_trace_blocks_local():
+        from repro.isa.vm import instr_trace_blocks
+        return instr_trace_blocks(iter_transpose_instrs(n),
+                                  transpose_n_threads(n),
+                                  STREAM_BLOCK_OPS)
+
+    def build_dense():
+        return _cm([a16], program_trace(transpose_program(n)))[0]
+
+    stream_cost = build_stream()            # warmup (jit) + checksum
+    stream_peak = _peak_bytes(build_stream)
+    stream_s = _timeit(build_stream, repeats=3)
+    row = {
+        "workload": f"construct_transpose{n}", "n_ops": n_ops,
+        "block_ops": STREAM_BLOCK_OPS,
+        "dense_matrix_bytes": n_ops * 16 * 4,
+        "stream_peak_bytes": int(stream_peak),
+        "stream_s": round(stream_s, 4),
+        "stream_build_ops_per_s": int(n_ops / stream_s),
+        "peak_gated": n >= 1024,
+        "total_cycles_16B": stream_cost.total_cycles,
+    }
+    if with_dense:
+        dense_cost = build_dense()
+        dense_peak = _peak_bytes(build_dense)
+        dense_s = _timeit(build_dense, repeats=3)
+        row.update({
+            "dense_peak_bytes": int(dense_peak),
+            "dense_s": round(dense_s, 4),
+            "construction_bit_equal": bool(dense_cost == stream_cost),
+            "construction_peak_ratio": round(
+                dense_peak / max(stream_peak, 1), 2),
+        })
+    return row
+
+
+def _construction_rows(smoke: bool) -> list:
+    out = [bench_construction(256, with_dense=True),
+           bench_construction(1024, with_dense=True)]
+    if not smoke:
+        # 4096² transpose: 2.1e6 ops lowered + costed, never densified
+        out.append(bench_construction(4096, with_dense=False))
+    return out
+
+
 def rows(smoke: bool = False) -> list:
     archs = [_arch.resolve(n) for n in ARCH_NAMES]
     out = [bench_case(name, trace, archs) for name, trace in _cases(smoke)]
     out.append(bench_million_op_stream(archs, smoke))
+    out.extend(_construction_rows(smoke))
     return out
 
 
@@ -144,6 +237,16 @@ def check(results: list) -> list:
                 f"per-arch loop (< {CHECK_SPEEDUP}x)")
         if r.get("cycles_equal") is False or r.get("prefix_bit_equal") is False:
             failures.append(f"{r['workload']}: engine not bit-equal to loop")
+        if r.get("construction_bit_equal") is False:
+            failures.append(
+                f"{r['workload']}: streamed construction not bit-equal to "
+                f"the dense build")
+        if r.get("peak_gated") and (r["stream_peak_bytes"]
+                                    >= r["dense_matrix_bytes"]):
+            failures.append(
+                f"{r['workload']}: streamed construction peaked at "
+                f"{r['stream_peak_bytes']} B >= the {r['dense_matrix_bytes']}"
+                f" B dense (ops x 16) matrix it must never materialize")
     return failures
 
 

@@ -45,13 +45,27 @@ class Workload:
     meta: dict = field(default_factory=dict)
 
     def trace(self):
-        """The workload's ``AddressTrace`` (repro.core.trace), built once and
-        costed under every architecture of a sweep — the trace is a pure
-        function of the program, so one lowering serves all cells."""
+        """The workload's dense ``AddressTrace`` (repro.core.trace), built
+        once and costed under every architecture of a sweep — the trace is a
+        pure function of the program, so one lowering serves all cells.
+        Prefer ``trace_stream`` for costing: bit-equal, O(block) memory."""
         cached = getattr(self, "_trace", None)
         if cached is None:
             cached = self.program.address_trace()
             object.__setattr__(self, "_trace", cached)
+        return cached
+
+    def trace_stream(self):
+        """The workload's lazy block lowering (``repro.core.trace.Trace``):
+        the program streams block-by-block into the cost engine, never
+        concatenating the dense (ops × 16) matrix.  The cached artifact is
+        the re-iterable *block iterator*, not a dense trace — what
+        ``run_cells`` prices (bit-equal to ``trace()``)."""
+        cached = getattr(self, "_trace_stream", None)
+        if cached is None:
+            from repro.isa.vm import program_trace_stream
+            cached = program_trace_stream(self.program)
+            object.__setattr__(self, "_trace_stream", cached)
         return cached
 
 
@@ -62,31 +76,49 @@ class TraceWorkload:
     placement (and therefore address stream) depends on the architecture's
     bank map, so the trace is re-lowered per sweep cell.
 
-    ``trace_fn(arch) -> AddressTrace``.  Lowerings are cached — and batched
-    sweeps grouped — by ``lowering_key(arch)``; the default key is the full
-    ``MemSpec``, so two space points that merely share a display name never
-    share a trace.  Pass a coarser key when the lowering only depends on
-    part of the spec (``serving_workload`` keys on the banked layout, which
-    lets every multi-port point share the canonical pool's stream).
+    ``trace_fn(arch) -> AddressTrace``; optionally ``stream_fn(arch) ->
+    repro.core.trace.Trace`` (a lazy block lowering, e.g.
+    ``simulate_serving_stream``) — when present, batched sweeps price the
+    stream and the dense trace is never built.  Lowerings are cached — and
+    batched sweeps grouped — by ``lowering_key(arch)``; the default key is
+    the full ``MemSpec``, so two space points that merely share a display
+    name never share a trace.  Pass a coarser key when the lowering only
+    depends on part of the spec (``serving_workload`` keys on the banked
+    layout, which lets every multi-port point share the canonical pool's
+    stream).
     """
     name: str
     trace_fn: Callable
     meta: dict = field(default_factory=dict)
     lowering_key: Callable | None = None
+    stream_fn: Callable | None = None
 
     def _key(self, a: MemoryArchitecture):
         return self.lowering_key(a) if self.lowering_key else a.spec
 
-    def trace(self, arch):
-        a = _arch.resolve(arch)
-        cache = getattr(self, "_traces", None)
+    def _cached(self, attr: str, a: MemoryArchitecture, fn: Callable):
+        cache = getattr(self, attr, None)
         if cache is None:
             cache = {}
-            object.__setattr__(self, "_traces", cache)
+            object.__setattr__(self, attr, cache)
         key = self._key(a)
         if key not in cache:
-            cache[key] = self.trace_fn(a)
+            cache[key] = fn(a)
         return cache[key]
+
+    def trace(self, arch):
+        """The dense lowering under ``arch`` (cached per lowering key)."""
+        return self._cached("_traces", _arch.resolve(arch), self.trace_fn)
+
+    def stream(self, arch):
+        """The block lowering under ``arch`` (cached per lowering key):
+        ``stream_fn``'s lazy ``Trace`` when registered, else the cached
+        dense trace (which the engine chunks itself).  What ``run_cells``
+        and ``tune.search`` price — bit-equal to ``trace``."""
+        a = _arch.resolve(arch)
+        if self.stream_fn is None:
+            return self.trace(a)
+        return self._cached("_streams", a, self.stream_fn)
 
 
 def _nan_to_blank(x: float) -> float | str:
@@ -143,10 +175,12 @@ def run_cells(archs: Iterable, workload) -> list[dict]:
 
     A ``Workload``'s trace is architecture-independent: one lowering, one
     device pass for the whole row.  A ``TraceWorkload`` groups its
-    architectures by ``lowering_key`` and prices each group's shared trace
-    against all of the group's cells at once.  Records come back in input
-    architecture order (timing-only — use ``run_cell(execute=True)`` for
-    functional runs).
+    architectures by ``lowering_key`` and prices each group's shared
+    lowering against all of the group's cells at once.  Both price the
+    *streamed* lowering (``trace_stream`` / ``stream``) — the cached
+    artifact is a re-iterable block iterator, bit-equal to the dense trace
+    but O(block) in memory.  Records come back in input architecture order
+    (timing-only — use ``run_cell(execute=True)`` for functional runs).
     """
     from repro.core.cost_engine import cost_many
     arch_objs = [_arch.resolve(a) for a in archs]
@@ -156,12 +190,12 @@ def run_cells(archs: Iterable, workload) -> list[dict]:
             groups.setdefault(workload._key(a), []).append(i)
         records: list = [None] * len(arch_objs)
         for idxs in groups.values():
-            trace = workload.trace(arch_objs[idxs[0]])
-            costs = cost_many([arch_objs[i] for i in idxs], trace)
+            stream = workload.stream(arch_objs[idxs[0]])
+            costs = cost_many([arch_objs[i] for i in idxs], stream)
             for i, c in zip(idxs, costs):
                 records[i] = _record(workload, arch_objs[i], c)
         return records
-    costs = cost_many(arch_objs, workload.trace())
+    costs = cost_many(arch_objs, workload.trace_stream())
     return [_record(workload, a, c) for a, c in zip(arch_objs, costs)]
 
 

@@ -66,15 +66,22 @@ def serving_workload(batch: int = 4, prompt_len: int = 32,
     The lowering only depends on the architecture's *banked layout* (every
     layout-free memory prices the canonical 16-bank LSB pool's stream), so
     that is the ``lowering_key`` — batched sweeps lower once per distinct
-    layout and price each group's cells in one fused engine pass.
+    layout and price each group's cells in one fused engine pass.  The
+    cached lowering is the lazy ``simulate_serving_stream`` block iterator
+    (the unified ``Trace`` protocol): batched sweeps and ``tune.search``
+    price it in O(block) memory; ``trace_fn`` (its dense materialization)
+    exists for per-cell introspection.
     """
-    from repro.serving.kvcache import simulate_serving_trace
+    from repro.serving.kvcache import (simulate_serving_stream,
+                                       simulate_serving_trace)
+    kw = dict(batch=batch, prompt_len=prompt_len, decode_steps=decode_steps,
+              page_len=page_len, n_kv_layers=n_kv_layers)
 
     def trace_fn(arch):
-        return simulate_serving_trace(
-            arch, batch=batch, prompt_len=prompt_len,
-            decode_steps=decode_steps, page_len=page_len,
-            n_kv_layers=n_kv_layers)
+        return simulate_serving_trace(arch, **kw)
+
+    def stream_fn(arch):
+        return simulate_serving_stream(arch, **kw)
 
     def lowering_key(arch):
         lay = arch.layout
@@ -87,4 +94,5 @@ def serving_workload(batch: int = 4, prompt_len: int = 32,
         meta={"batch": batch, "prompt_len": prompt_len,
               "decode_steps": decode_steps, "page_len": page_len,
               "n_kv_layers": n_kv_layers},
-        lowering_key=lowering_key)
+        lowering_key=lowering_key,
+        stream_fn=stream_fn)

@@ -216,7 +216,8 @@ class MemoryArchitecture:
         return cyc + self._instruction_overhead(is_write)
 
     def cost(self, addr_trace, block_ops: int | None = None) -> TraceCost:
-        """Cost an ``AddressTrace`` (or a lazy ``TraceStream``) under this
+        """Cost any ``repro.core.trace.Trace`` (a dense ``AddressTrace``, a
+        lazy ``TraceStream``, or a raw block iterable) under this
         architecture's timing model.
 
         The single costing entry point of the redesign: kernels' ``trace``
@@ -225,10 +226,17 @@ class MemoryArchitecture:
         landed this is a thin single-arch shim over
         ``repro.core.cost_engine.cost_many`` (cycle-bit-equal to the legacy
         per-kind loop, which survives as ``_cost_loop`` for the perf
-        baseline); ``block_ops`` chunks the trace so million-op streams
-        cost in O(block) memory.
+        baseline).  ``block_ops`` chunks the trace so million-op streams
+        cost in O(block) memory; when omitted, traces bigger than
+        ``STREAM_THRESHOLD`` ops stream at ``DEFAULT_BLOCK_OPS``
+        automatically (bit-equal either way).
         """
-        from repro.core.cost_engine import cost_many
+        from repro.core.cost_engine import (DEFAULT_BLOCK_OPS,
+                                            STREAM_THRESHOLD, cost_many)
+        if block_ops is None:
+            n = getattr(addr_trace, "n_ops", None)
+            if n is not None and n > STREAM_THRESHOLD:
+                block_ops = DEFAULT_BLOCK_OPS
         return cost_many([self], addr_trace, block_ops=block_ops)[0]
 
     def _cost_loop(self, addr_trace) -> TraceCost:
@@ -408,7 +416,8 @@ def from_spec(spec: MemSpec) -> MemoryArchitecture:
 _REGISTRY: dict[str, MemoryArchitecture] = {}
 
 _BANKED_NAME = re.compile(
-    r"^(?P<banks>\d+)B(?:-(?P<mapping>[a-z]+))?(?P<bcast>-bcast)?$")
+    r"^(?P<banks>\d+)B(?:-(?P<mapping>[a-z]+))?(?:-s(?P<shift>\d+))?"
+    r"(?P<bcast>-bcast)?$")
 _MULTIPORT_NAME = re.compile(
     r"^(?P<r>\d+)R-(?P<w>\d+)W(?P<vb>-VB)?$")
 
@@ -430,7 +439,14 @@ def _parse(name: str) -> MemoryArchitecture | None:
             bcast = bool(m.group("bcast"))
         if mapping not in BANK_MAPS:
             return None
-        return BankedMemory(int(m.group("banks")), mapping, broadcast=bcast)
+        if m.group("shift") and mapping != "offset":
+            # only the offset map has a shift; accepting "16B-s2" would
+            # mint an arch whose name ("16B") doesn't round-trip and whose
+            # layout key spuriously differs from the plain point
+            return None
+        return BankedMemory(int(m.group("banks")), mapping,
+                            shift=int(m.group("shift") or 1),
+                            broadcast=bcast)
     m = _MULTIPORT_NAME.match(name)
     if m:
         return MultiPortMemory(int(m.group("r")), int(m.group("w")),

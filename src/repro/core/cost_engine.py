@@ -18,19 +18,23 @@ parameter set:
 so the whole lattice lowers to one ``(n_archs, 2 paths, 7)`` int32 parameter
 table (``lower_archs``) and one jitted vmap prices every architecture
 against a trace block simultaneously (``cost_many``) — one device sync
-total.  Blocks come from a dense ``AddressTrace`` (optionally chunked via
-``iter_blocks``) or a lazy ``repro.core.trace.TraceStream``, so costing is
-O(block) in memory and serving traces can exceed 1e6 ops without ever
-materializing the dense (ops × 16) matrix.
+total.  The engine consumes the one ``repro.core.trace.Trace`` protocol:
+``as_trace(trace).blocks(block_ops)`` yields blocks with globally
+consistent, non-decreasing instruction ids, so a dense ``AddressTrace``, a
+chunked one, a lazy ``TraceStream`` of kernel/serving blocks, or any raw
+block iterable all cost through the same loop in O(block) memory —
+million-op traces never materialize their dense (ops × 16) matrix.
 
 Chunked, streamed, and dense costing are bit-equal (pinned in
 tests/test_cost_engine.py): per-op cycles only depend on the op itself, and
-per-instruction controller overheads are charged from instruction ids —
-which block views preserve globally, and stream blocks carry whole.
+per-instruction controller overheads are charged from the protocol's global
+instruction ids by a streaming distinct-count (an instruction cut at a
+block boundary keeps one id on both sides and is charged once).
 
-``MemoryArchitecture.cost`` is a thin single-arch shim over this engine;
-``tune.search``, ``bench.sweep`` and the serving cost path batch through
-``cost_many`` directly.
+``MemoryArchitecture.cost`` is a thin single-arch shim over this engine
+(auto-chunking above ``STREAM_THRESHOLD`` ops); ``tune.search``,
+``bench.sweep`` and the serving cost path batch through ``cost_many``
+directly.
 """
 from __future__ import annotations
 
@@ -43,9 +47,17 @@ import numpy as np
 from repro.core import controllers as ctl
 from repro.core.conflicts import first_occurrence
 from repro.core.memsim import LANES, MemSpec, TraceCost
-from repro.core.trace import KIND_LOAD, KIND_STORE, KIND_TW, AddressTrace
+from repro.core.trace import (KIND_LOAD, KIND_STORE, KIND_TW, AddressTrace,
+                              as_trace)
 
-__all__ = ["cost_many", "lower_archs", "ArchTable"]
+__all__ = ["cost_many", "lower_archs", "ArchTable", "DEFAULT_BLOCK_OPS",
+           "STREAM_THRESHOLD"]
+
+#: block size ``MemoryArchitecture.cost`` auto-chunks with when a dense
+#: trace exceeds ``STREAM_THRESHOLD`` ops (bit-equal either way; chunking
+#: merely bounds the device-buffer working set)
+DEFAULT_BLOCK_OPS = 4096
+STREAM_THRESHOLD = 1 << 15
 
 #: shifting an int32 word address by 31 yields 0 (addresses are non-negative)
 #: — the identity element for the generic bank formula's unused terms.
@@ -172,18 +184,19 @@ def _block_kind_cycles(params, addrs, mask, kinds, *, need_uniq: bool):
     return cyc @ kind_onehot                                     # (A, 3)
 
 
-def _pad_block(t: AddressTrace) -> tuple:
-    """Pad a block to the next power-of-two op count (bounds the number of
-    compiled shapes to log2 variants).  Padded ops are fully inactive."""
-    n = t.n_ops
+def _pad_ops(addrs: np.ndarray, mask: np.ndarray,
+             kinds: np.ndarray) -> tuple:
+    """Pad an op batch to the next power-of-two op count (bounds the number
+    of compiled shapes to log2 variants).  Padded ops are fully inactive."""
+    n = addrs.shape[0]
     padded = 1 << max(0, n - 1).bit_length()
-    addrs = np.zeros((padded, LANES), np.int32)
-    addrs[:n] = t.addrs
-    mask = np.zeros((padded, LANES), bool)
-    mask[:n] = True if t.mask is None else t.mask
-    kinds = np.zeros((padded,), np.int32)
-    kinds[:n] = t.kinds
-    return addrs, mask, kinds
+    a = np.zeros((padded, LANES), np.int32)
+    a[:n] = addrs
+    m = np.zeros((padded, LANES), bool)
+    m[:n] = mask
+    k = np.zeros((padded,), np.int32)
+    k[:n] = kinds
+    return a, m, k
 
 
 # --------------------------------------------------------------------------
@@ -204,26 +217,48 @@ def _fold(totals, partials: list, n_archs: int) -> np.ndarray:
     return totals
 
 
-def _instr_counts(t: AddressTrace) -> np.ndarray:
-    """(3,) distinct-instruction count per kind (ids are global within one
-    trace, so counting once per source trace is boundary-safe)."""
-    out = np.zeros(3, np.int64)
-    for i, kind in enumerate(_KINDS):
-        sel = t.kinds == kind
-        if sel.any():
-            out[i] = np.unique(t.instr[sel]).size
-    return out
+class _InstrCounter:
+    """Streaming per-kind distinct-instruction counter over protocol blocks.
+
+    Blocks arrive with globally consistent, NON-DECREASING instruction ids
+    (the ``Trace.blocks`` contract), so distinct ids per kind can be counted
+    one block at a time: a block's contribution is its per-kind unique-id
+    count, minus one when its first id of that kind continues the previous
+    block's last (the instruction the boundary cut).  This is what lets a
+    single instruction span any number of stream chunks and still pay its
+    controller overhead exactly once.
+    """
+
+    def __init__(self):
+        self.n_instr = np.zeros(3, np.int64)
+        self.n_ops = np.zeros(3, np.int64)
+        self._last: dict = {}        # kind -> last global id seen
+
+    def add(self, blk: AddressTrace) -> None:
+        for i, kind in enumerate(_KINDS):
+            sel = blk.kinds == kind
+            n = int(sel.sum())
+            if not n:
+                continue
+            self.n_ops[i] += n
+            ids = np.unique(blk.instr[sel])
+            add = ids.size
+            if self._last.get(kind) == int(ids[0]):
+                add -= 1
+            self._last[kind] = int(ids[-1])
+            self.n_instr[i] += add
 
 
 def cost_many(archs, trace, block_ops: int | None = None) -> list[TraceCost]:
     """Price every architecture of ``archs`` against one trace in a single
     fused computation (one device sync total, not ``len(archs) × 3``).
 
-    ``trace`` is a dense ``AddressTrace``, a lazy ``TraceStream``, or any
-    iterable of ``AddressTrace`` blocks (whole-instruction blocks, as
-    ``TraceStream`` documents).  ``block_ops`` additionally chunks each
-    source trace into at-most-``block_ops``-op pieces, bounding peak memory;
-    dense, chunked, and streamed costing are bit-equal.
+    ``trace`` is anything ``repro.core.trace.as_trace`` accepts: a dense
+    ``AddressTrace``, a lazy ``TraceStream`` (e.g. a kernel's
+    ``trace_blocks`` stream or serving traffic), or a raw iterable /
+    callable of ``AddressTrace`` blocks.  ``block_ops`` additionally chunks
+    every block to at most that many ops, bounding peak memory; dense,
+    chunked, and streamed costing are bit-equal.
 
     Returns one ``TraceCost`` per architecture, in input order — exactly
     what ``arch.cost(trace)`` returns for each (``MemoryArchitecture.cost``
@@ -236,47 +271,61 @@ def cost_many(archs, trace, block_ops: int | None = None) -> list[TraceCost]:
     table = _lowered(tuple(a.spec for a in arch_objs))
     params = jnp.asarray(table.params)
 
-    partials: list = []    # per-block (A, 3) int32 device arrays; summed in
-    # int64 on the host (folded every _FOLD_EVERY blocks for dispatch-queue
-    # backpressure), so totals cannot overflow int32 across blocks (within
-    # one block sums are bounded by block_ops × LANES)
+    partials: list = []    # per-batch (A, 3) int32 device arrays; summed in
+    # int64 on the host (folded every _FOLD_EVERY batches for dispatch-queue
+    # backpressure), so totals cannot overflow int32 across batches (within
+    # one batch sums are bounded by the batch op count × LANES)
     totals = None
-    n_instr = np.zeros(3, np.int64)
-    n_ops = np.zeros(3, np.int64)
+    counter = _InstrCounter()
     compute_cycles = 0
     op_counts: dict = {}
 
-    is_stream = not isinstance(trace, AddressTrace)
-    sources = trace if is_stream else [trace]
-    for src in sources:
-        if is_stream and src.meta.get("_block_view"):
-            raise ValueError(
-                "stream sources must be independent whole-instruction "
-                "traces, but got AddressTrace.iter_blocks views (they share "
-                "instruction ids with their parent and carry no compute "
-                "metadata — overheads would be double-charged at block "
-                "boundaries); pass the parent trace with block_ops=… "
-                "instead")
-        compute_cycles += src.compute_cycles
-        for k, v in src.op_counts.items():
+    # Small protocol blocks (e.g. per-instruction kernel/VM chunks of ~64
+    # ops) are coalesced into one device dispatch of up to the target op
+    # count — per-op cycles are independent of batch grouping and the
+    # instruction counter works on the blocks themselves, so coalescing
+    # cannot change a single cycle, only the dispatch count.
+    target = block_ops if block_ops is not None else DEFAULT_BLOCK_OPS
+    pending: list = []
+    pending_ops = 0
+
+    def _flush():
+        nonlocal totals, pending_ops
+        if not pending:
+            return
+        if len(pending) == 1:
+            addrs, mask, kinds = pending[0]
+        else:
+            addrs = np.concatenate([p[0] for p in pending])
+            mask = np.concatenate([p[1] for p in pending])
+            kinds = np.concatenate([p[2] for p in pending])
+        pending.clear()
+        pending_ops = 0
+        addrs, mask, kinds = _pad_ops(addrs, mask, kinds)
+        partials.append(_block_kind_cycles(
+            params, jnp.asarray(addrs), jnp.asarray(mask),
+            jnp.asarray(kinds), need_uniq=table.need_uniq))
+        if len(partials) >= _FOLD_EVERY:
+            totals = _fold(totals, partials, len(arch_objs))
+
+    for blk in as_trace(trace).blocks(block_ops):
+        compute_cycles += blk.compute_cycles
+        for k, v in blk.op_counts.items():
             op_counts[k] = op_counts.get(k, 0) + v
-        if not src.n_ops:
+        if not blk.n_ops:
             continue
-        n_instr += _instr_counts(src)
-        for i, kind in enumerate(_KINDS):
-            n_ops[i] += int((src.kinds == kind).sum())
-        blocks = (src.iter_blocks(block_ops)
-                  if block_ops is not None and src.n_ops > block_ops
-                  else (src,))
-        for blk in blocks:
-            addrs, mask, kinds = _pad_block(blk)
-            partials.append(_block_kind_cycles(
-                params, jnp.asarray(addrs), jnp.asarray(mask),
-                jnp.asarray(kinds), need_uniq=table.need_uniq))
-            if len(partials) >= _FOLD_EVERY:
-                totals = _fold(totals, partials, len(arch_objs))
+        counter.add(blk)
+        pending.append((blk.addrs,
+                        np.ones_like(blk.addrs, bool) if blk.mask is None
+                        else blk.mask,
+                        blk.kinds))
+        pending_ops += blk.n_ops
+        if pending_ops >= target:
+            _flush()
+    _flush()
 
     totals = _fold(totals, partials, len(arch_objs))
+    n_instr, n_ops = counter.n_instr, counter.n_ops
 
     costs = []
     for i in range(len(arch_objs)):

@@ -62,8 +62,15 @@ def banked(n_banks: int, mapping: str = "lsb", shift: int = 1,
     i.e. bits [4:1], reproduces 106/672/4672 load cycles, see DESIGN.md).
 
     broadcast=True adds beyond-paper same-address read coalescing (one
-    arbiter grant serves every lane requesting that address)."""
+    arbiter grant serves every lane requesting that address).
+
+    Non-default offset shifts are named ``{B}B-offset-s{K}`` (bank bits at
+    ``[K+log2B-1 : K]``) — the ``map_shift`` dimension ``tune.ArchSpace``
+    searches; the paper's calibrated shift-1 points keep their short
+    names."""
     suffix = "" if mapping == "lsb" else f"-{mapping}"
+    if mapping == "offset" and shift != 1:
+        suffix += f"-s{shift}"
     if broadcast:
         suffix += "-bcast"
     return MemSpec(kind="banked", name=f"{n_banks}B{suffix}", n_banks=n_banks,

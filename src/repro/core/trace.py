@@ -37,16 +37,46 @@ request stream), ``AddressTrace.from_ops`` (pre-shaped operation matrices),
 ``AddressTrace.from_program`` (an ISA macro-op program — the VM costs this
 exact object), or incrementally through ``TraceBuilder``.  Traces compose
 with ``+`` and slice with ``[start:stop]`` over operations.
+
+The Trace protocol
+==================
+
+Every costed object — dense or lazy — answers one iteration protocol::
+
+    trace.blocks(block_ops=None) -> Iterator[AddressTrace]
+    trace.meta                   -> dict
+    trace.n_ops                  -> int | None   (None when unknowable lazily)
+
+``blocks`` yields ``AddressTrace`` blocks whose instruction ids are
+*globally consistent and non-decreasing* across the whole iteration: an
+instruction cut by a block boundary keeps one id on both sides (so its
+controller overhead is charged exactly once), and per-block
+``compute_cycles`` / ``op_counts`` sum to the trace totals.  A dense
+``AddressTrace`` is the one-block special case; ``TraceStream`` is the lazy
+many-block case; ``as_trace`` coerces raw block iterables.  The batched cost
+engine (``repro.core.cost_engine.cost_many``) consumes nothing else — dense,
+chunked, and streamed costing are bit-equal by construction.
+
+Stream *sources* (what a ``TraceStream`` iterates) are ordinary traces with
+LOCAL instruction ids; the stream renumbers them onto the global axis as it
+yields.  A source block carrying ``meta["instr_carry"] = True`` declares its
+first instruction to be the continuation of the previous block's last one
+(``iter_op_chunks`` and ``AddressTrace.iter_blocks`` mark continuation
+chunks this way), which is how a single huge instruction — e.g. a
+million-index gather — streams in O(block) memory without ever splitting
+into several charged instructions.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Iterator, Protocol
 
 import numpy as np
 
 from repro.core.memsim import LANES
 
-__all__ = ["AddressTrace", "TraceBuilder", "TraceStream", "as_ops",
+__all__ = ["AddressTrace", "TraceBuilder", "TraceStream", "Trace",
+           "as_trace", "as_ops", "iter_op_chunks",
            "KIND_LOAD", "KIND_STORE", "KIND_TW", "LANES"]
 
 KIND_LOAD, KIND_STORE, KIND_TW = 0, 1, 2
@@ -80,6 +110,35 @@ def as_ops(addrs) -> np.ndarray:
     if pad:
         a = np.concatenate([a, np.repeat(a[-1], pad)])
     return a.reshape(-1, LANES)
+
+
+class Trace(Protocol):
+    """Structural protocol every costed trace object answers (see the module
+    docstring): ``blocks(block_ops)`` iteration with globally consistent
+    instruction ids, a ``meta`` dict, and ``n_ops`` (None when lazy).
+    ``AddressTrace`` and ``TraceStream`` are the two implementations;
+    ``as_trace`` coerces raw block iterables."""
+
+    meta: dict
+
+    def blocks(self, block_ops: int | None = None
+               ) -> Iterator["AddressTrace"]: ...
+
+
+def as_trace(obj) -> "AddressTrace | TraceStream":
+    """Coerce anything trace-like to a ``Trace``: ``AddressTrace`` and
+    ``TraceStream`` pass through (as does any object with a ``blocks``
+    method); a zero-arg callable or an iterable of ``AddressTrace`` blocks
+    is wrapped as a ``TraceStream`` (independent-source semantics)."""
+    if isinstance(obj, (AddressTrace, TraceStream)):
+        return obj
+    if callable(getattr(obj, "blocks", None)):
+        return obj
+    if callable(obj) or hasattr(obj, "__iter__"):
+        return TraceStream(obj)
+    raise TypeError(f"cannot interpret {obj!r} as a Trace (expected an "
+                    f"AddressTrace, a TraceStream, or an iterable / "
+                    f"callable of AddressTrace blocks)")
 
 
 @dataclass(frozen=True, eq=False)
@@ -228,24 +287,55 @@ class AddressTrace:
             raise TypeError("AddressTrace slices over op ranges only")
         return self._select(item)
 
+    # -- the Trace protocol ------------------------------------------------
+
+    def blocks(self, block_ops: int | None = None):
+        """The Trace protocol: this trace as at-most-``block_ops``-op blocks
+        sharing the trace's (global) instruction ids — the dense trace is
+        the one-block special case.  Compute metadata rides on the first
+        block, so per-block sums reproduce the trace totals; costing the
+        blocks is bit-equal to costing the dense trace at any block size."""
+        if block_ops is not None and block_ops <= 0:
+            raise ValueError(f"block_ops must be positive, got {block_ops}")
+        if block_ops is None or self.n_ops <= block_ops:
+            yield self
+            return
+        first = True
+        for blk in self.iter_blocks(block_ops):
+            if first and (self.compute_cycles or self.op_counts):
+                blk = blk.with_compute(self.compute_cycles, self.op_counts)
+            first = False
+            yield blk
+
     def iter_blocks(self, block_ops: int):
         """Iterate the trace as ``block_ops``-sized op blocks (the last one
         ragged).  Blocks are views keeping the *global* instruction ids, so
-        an instruction cut by a block boundary stays one instruction.
-
-        This is the chunking mechanism behind ``cost_many(trace,
-        block_ops=…)``, which charges per-instruction overheads (and the
-        compute metadata this trace carries) once from the parent — that
-        path is bit-equal to dense costing at any block size.  Do NOT feed
-        the raw iterator to ``cost_many`` as if it were a ``TraceStream``:
-        stream sources are independent whole-instruction traces, while
-        these views share ids with their parent and carry no compute."""
+        an instruction cut by a block boundary stays one instruction; a
+        continuation block whose first instruction is the cut one is
+        additionally ``instr_carry``-marked, making the views valid stream
+        sources.  Views carry no compute metadata — iterate
+        ``blocks(block_ops)`` for the full protocol (compute included)."""
         if block_ops <= 0:
             raise ValueError(f"block_ops must be positive, got {block_ops}")
+        prev_last = None
         for start in range(0, self.n_ops, block_ops):
             blk = self._select(slice(start, start + block_ops))
-            blk.meta["_block_view"] = True    # cost_many rejects these as
-            yield blk                         # stream sources (see above)
+            if prev_last is not None and blk.instr[0] == prev_last:
+                blk.meta["instr_carry"] = True
+            prev_last = int(blk.instr[-1])
+            yield blk
+
+    def _with_instr_base(self, base: int) -> "AddressTrace":
+        """This trace with instruction ids densely renumbered onto a global
+        id axis starting at ``base`` (order-preserving: ids are
+        non-decreasing per the schema)."""
+        if not self.n_ops:
+            return self
+        _, dense = np.unique(self.instr, return_inverse=True)
+        return AddressTrace(self.addrs, self.kinds,
+                            dense.astype(np.int32) + base, self.mask,
+                            self.compute_cycles, dict(self.op_counts),
+                            dict(self.meta))
 
     def with_compute(self, compute_cycles: int,
                      op_counts: dict | None = None) -> "AddressTrace":
@@ -258,6 +348,34 @@ class AddressTrace:
         return (f"AddressTrace(ops={self.n_ops}, "
                 f"instrs={self.n_instructions}, "
                 f"compute_cycles={self.compute_cycles})")
+
+
+def iter_op_chunks(addrs, kind="load", mask=None, block_ops: int | None = None):
+    """ONE memory instruction's flat request stream, yielded as
+    at-most-``block_ops``-op ``AddressTrace`` blocks.
+
+    The streaming counterpart of ``AddressTrace.from_ops``: continuation
+    blocks are ``instr_carry``-marked, so stream consumers renumber them
+    onto the same global instruction id and the instruction's controller
+    overhead is charged exactly once — a million-index gather streams in
+    O(block) memory and costs bit-equal to the dense one-instruction trace.
+    Chunk boundaries fall on whole operations, so only the final block pads
+    a ragged tail (identically to the dense path)."""
+    a = np.asarray(addrs, np.int32).reshape(-1)
+    m = None if mask is None else np.asarray(mask, bool).reshape(-1)
+    if block_ops is not None and block_ops <= 0:
+        raise ValueError(f"block_ops must be positive, got {block_ops}")
+    step = None if block_ops is None else block_ops * LANES
+    if step is None or a.size <= step:
+        yield AddressTrace.from_ops(a, kind, mask=m)
+        return
+    for start in range(0, a.size, step):
+        blk = AddressTrace.from_ops(
+            a[start:start + step], kind,
+            mask=None if m is None else m[start:start + step])
+        if start:
+            blk.meta["instr_carry"] = True
+        yield blk
 
 
 class TraceBuilder:
@@ -296,36 +414,155 @@ class TraceBuilder:
 
 
 class TraceStream:
-    """A lazy sequence of ``AddressTrace`` blocks — the streaming counterpart
-    of one big concatenated trace.
+    """A lazy sequence of ``AddressTrace`` blocks — the streaming
+    implementation of the ``Trace`` protocol (the counterpart of one big
+    concatenated trace).
 
     Costing a stream through ``repro.core.cost_engine.cost_many`` is
-    bit-equal to costing ``AddressTrace.concat(*blocks)`` but touches one
-    block at a time, so a >1e6-op serving trace never materializes its dense
-    (ops × 16) matrix.  The contract mirrors ``concat``'s accounting: each
-    yielded block is a whole number of instructions (every block's
-    instructions are distinct from every other block's), and per-block
-    ``compute_cycles`` / ``op_counts`` sum.
+    bit-equal to costing its dense ``materialize()`` but touches one block
+    at a time, so a >1e6-op serving or kernel trace never materializes its
+    dense (ops × 16) matrix.
 
-    ``blocks`` is either an iterable of traces or a zero-arg callable
-    returning a fresh iterator — pass a callable (e.g. a generator function)
-    when the stream must be re-iterable or when blocks should be produced
-    on demand rather than held alive.
+    Sources vs blocks: the constructor takes *source* blocks — independent
+    traces with LOCAL instruction ids and summing compute metadata, plus
+    optional ``instr_carry``-marked continuation chunks (see
+    ``iter_op_chunks``).  ``blocks(block_ops)`` renumbers them onto one
+    global instruction id axis as it yields (further chunking each source to
+    at most ``block_ops`` ops), which is what the cost engine consumes.
+
+    ``blocks`` may be a sequence of traces or a zero-arg callable returning
+    a fresh iterator — pass a callable (e.g. a generator *function*) when
+    the stream must be re-iterable AND produced on demand.  A bare one-shot
+    iterator (e.g. a called generator) stays lazy — blocks are drawn as
+    they are costed, nothing is held alive — but supports a single pass: a
+    second iteration raises instead of silently yielding nothing (the
+    pre-refactor footgun, where ``ServeEngine``-style
+    ``lambda: iter(gen)`` wrappers priced an empty second pass as 0
+    cycles).
     """
 
     def __init__(self, blocks, meta: dict | None = None):
+        if not callable(blocks) and not hasattr(blocks, "__iter__"):
+            raise TypeError(
+                f"TraceStream needs an iterable of AddressTrace blocks "
+                f"or a zero-arg callable returning one, got {blocks!r}")
         self._blocks = blocks
+        self._consumed = False
         self.meta = dict(meta or {})
 
     def __iter__(self):
-        blocks = self._blocks() if callable(self._blocks) else self._blocks
-        return iter(blocks)
+        """Iterate the raw SOURCE blocks (local instruction ids); use
+        ``blocks()`` for the globally renumbered protocol iteration."""
+        if callable(self._blocks):
+            return iter(self._blocks())
+        if iter(self._blocks) is self._blocks:   # one-shot iterator source
+            if self._consumed:
+                raise RuntimeError(
+                    "this TraceStream wraps a one-shot iterator that was "
+                    "already consumed; pass a sequence of blocks or a "
+                    "zero-arg callable (e.g. the generator FUNCTION, not a "
+                    "called generator) for a re-iterable stream")
+            self._consumed = True
+            return iter(self._blocks)
+        return iter(self._blocks)
+
+    # -- the Trace protocol ------------------------------------------------
+
+    @property
+    def n_ops(self) -> int | None:
+        """Total op count when cheaply knowable (sequence-backed streams),
+        else ``meta["n_ops"]`` if the producer recorded it, else None
+        (counting would consume lazy / one-shot sources)."""
+        if (not callable(self._blocks)
+                and iter(self._blocks) is not self._blocks):
+            return sum(b.n_ops for b in self._blocks)
+        n = self.meta.get("n_ops")
+        return None if n is None else int(n)
+
+    def blocks(self, block_ops: int | None = None):
+        """The Trace protocol: yield the stream's blocks with instruction
+        ids renumbered onto one global, non-decreasing axis
+        (``instr_carry``-marked continuation chunks glue to the previous
+        block's last instruction), each source further chunked to at most
+        ``block_ops`` ops.  Costing the result is bit-equal to costing the
+        dense ``materialize()``."""
+        off = 0
+        seen_ids = False
+        for src in self:
+            if not src.n_ops:
+                if src.compute_cycles or src.op_counts:
+                    yield src
+                continue
+            carry = seen_ids and bool(src.meta.get("instr_carry"))
+            base = off - 1 if carry else off
+            renum = src._with_instr_base(base)
+            off = base + src.n_instructions
+            seen_ids = True
+            yield from renum.blocks(block_ops)
+
+    # -- parity with AddressTrace ------------------------------------------
+
+    @classmethod
+    def concat(cls, *traces, meta: dict | None = None) -> "TraceStream":
+        """Compose traces and/or streams back-to-back into one lazy stream
+        (the streaming counterpart of ``AddressTrace.concat``)."""
+        parts = [as_trace(t) for t in traces]
+
+        def gen():
+            for p in parts:
+                if isinstance(p, TraceStream):
+                    yield from p            # raw sources keep their contract
+                else:
+                    yield p                 # a dense trace is one source
+
+        return cls(gen, meta=dict(meta or {}))
+
+    def of_kind(self, kind) -> "TraceStream":
+        """Memory-only sub-stream of one op kind (compute metadata dropped,
+        like ``AddressTrace.of_kind``).  Exact whenever instructions are
+        single-kind — true for every producer in this repo."""
+        code = _kind_code(kind)
+
+        def gen():
+            for b in self:
+                yield b.of_kind(code)
+
+        return TraceStream(gen, meta={**self.meta, "kind": code})
+
+    def loads(self) -> "TraceStream":
+        return self.of_kind(KIND_LOAD)
+
+    def stores(self) -> "TraceStream":
+        return self.of_kind(KIND_STORE)
+
+    def tw_loads(self) -> "TraceStream":
+        return self.of_kind(KIND_TW)
 
     def materialize(self) -> AddressTrace:
         """Concatenate the whole stream into one dense trace (for tests and
-        small streams; defeats the purpose for >1e6-op traffic)."""
-        t = AddressTrace.concat(*self)
-        t.meta.update(self.meta)
+        small streams; defeats the purpose for >1e6-op traffic).  Built from
+        the renumbered ``blocks()``, so carry-marked continuation chunks
+        merge into single instructions exactly as the engine counts them."""
+        blks = list(self.blocks())
+        counts: dict = {}
+        for b in blks:
+            for k, v in b.op_counts.items():
+                counts[k] = counts.get(k, 0) + v
+        compute = sum(b.compute_cycles for b in blks)
+        nonempty = [b for b in blks if b.n_ops]
+        if not nonempty:
+            t = AddressTrace.empty().with_compute(compute, counts)
+            t.meta.update(self.meta)
+            return t
+        any_mask = any(b.mask is not None for b in nonempty)
+        masks = [np.ones_like(b.addrs, bool) if b.mask is None else b.mask
+                 for b in nonempty] if any_mask else None
+        t = AddressTrace(np.concatenate([b.addrs for b in nonempty]),
+                         np.concatenate([b.kinds for b in nonempty]),
+                         np.concatenate([b.instr for b in nonempty]),
+                         np.concatenate(masks) if any_mask else None,
+                         compute_cycles=compute, op_counts=counts,
+                         meta=dict(self.meta))
         return t
 
     def __repr__(self) -> str:

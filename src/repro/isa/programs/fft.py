@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.isa.assembler import Program
+from repro.isa.assembler import Compute, MemLoad, MemStore, Program
 
 # FP instructions per DFT-R core (radix-4 derived from the butterfly template:
 # 8 complex adds = 16 + 1 j-rotation fixup = 17; radix-8/16 calibrated to
@@ -86,54 +86,77 @@ def _pass_fn(radix: int, q: np.ndarray, stage_p: int, last: bool):
     return fn
 
 
-def fft_program(n: int = 4096, radix: int = 4, tw_base: int | None = None) -> Program:
+def iter_fft_instrs(n: int = 4096, radix: int = 4,
+                    tw_base: int | None = None):
+    """Lazily yield the radix-R DIF FFT macro-ops pass by pass (validates
+    eagerly, then returns a generator).
+
+    The single source of the program's content: ``fft_program``
+    materializes it into a ``Program``, while the streaming trace pipeline
+    lowers it block-by-block (``isa.vm.instr_trace_blocks``) — each pass's
+    (T,) address vectors exist only while their instructions are drawn.
+    """
     L = int(round(np.log(n) / np.log(radix)))
     if radix ** L != n:
         raise ValueError(f"n={n} is not a power of radix={radix}")
     tw_base = 2 * n if tw_base is None else tw_base
-    T = n // radix
-    prog = Program(f"fft{n}r{radix}", n_threads=T,
+
+    def gen():
+        T = n // radix
+        t = np.arange(T, dtype=np.int64)
+        for p in range(L):
+            m = n // radix ** p
+            sub = m // radix
+            j, q = t // sub, t % sub
+            base = j * m + q
+            last = (p == L - 1)
+
+            yield Compute({"imm": IMM_PER_PASS[radix]}, label=f"p{p} pointers")
+            yield Compute({"int": INT_PER_PASS[radix]},
+                          label=f"p{p} addressing")
+            yield Compute({"other": OTHER_SCALAR_PER_PASS[radix]},
+                          scalar=True, label=f"p{p} control")
+
+            # data loads: R two-word (I/Q) complex load instructions
+            for k in range(radix):
+                a = 2 * (base + k * sub)
+                yield MemLoad((f"x{k}_re", f"x{k}_im"),
+                              np.asarray(np.stack([a, a + 1]), np.int32))
+            # twiddle loads (skipped on the final, trivial pass)
+            if not last:
+                step = n // m  # = radix**p
+                for i in range(1, radix):
+                    widx = (q * i * step) % n
+                    ta = tw_base + 2 * widx
+                    yield MemLoad((f"tw{i}_re", f"tw{i}_im"),
+                                  np.asarray(np.stack([ta, ta + 1]), np.int32),
+                                  space="TW")
+
+            # butterfly (FP bundle)
+            fp = (radix - 1) * 6 + DFT_FP[radix]
+            yield Compute({"fp": fp}, fn=_pass_fn(radix, q, p, last),
+                          label=f"p{p} butterfly")
+
+            # stores: R two-word complex store instructions (blocking between
+            # passes: data is reused immediately — paper §III.A's blocking
+            # case)
+            for i in range(radix):
+                a = 2 * (base + i * sub)
+                yield MemStore((f"y{i}_re", f"y{i}_im"),
+                               np.asarray(np.stack([a, a + 1]), np.int32),
+                               blocking=True)
+
+    return gen()
+
+
+def fft_program(n: int = 4096, radix: int = 4, tw_base: int | None = None) -> Program:
+    L = int(round(np.log(n) / np.log(radix)))
+    if radix ** L != n:
+        raise ValueError(f"n={n} is not a power of radix={radix}")
+    prog = Program(f"fft{n}r{radix}", n_threads=n // radix,
                    meta={"n": n, "radix": radix, "passes": L,
-                         "tw_base": tw_base})
-    t = np.arange(T, dtype=np.int64)
-
-    for p in range(L):
-        m = n // radix ** p
-        sub = m // radix
-        j, q = t // sub, t % sub
-        base = j * m + q
-        last = (p == L - 1)
-
-        prog.compute({"imm": IMM_PER_PASS[radix]}, label=f"p{p} pointers")
-        prog.compute({"int": INT_PER_PASS[radix]}, label=f"p{p} addressing")
-        prog.compute({"other": OTHER_SCALAR_PER_PASS[radix]}, scalar=True,
-                     label=f"p{p} control")
-
-        # data loads: R two-word (I/Q) complex load instructions
-        for k in range(radix):
-            a = 2 * (base + k * sub)
-            prog.load((f"x{k}_re", f"x{k}_im"), np.stack([a, a + 1]))
-        # twiddle loads (skipped on the final, trivial pass)
-        if not last:
-            step = n // m  # = radix**p
-            for i in range(1, radix):
-                widx = (q * i * step) % n
-                ta = tw_base + 2 * widx
-                prog.load((f"tw{i}_re", f"tw{i}_im"),
-                          np.stack([ta, ta + 1]), space="TW")
-
-        # butterfly (FP bundle)
-        fp = (radix - 1) * 6 + DFT_FP[radix]
-        prog.compute({"fp": fp}, fn=_pass_fn(radix, q, p, last),
-                     label=f"p{p} butterfly")
-
-        # stores: R two-word complex store instructions (blocking between
-        # passes: data is reused immediately — paper §III.A's blocking case)
-        for i in range(radix):
-            a = 2 * (base + i * sub)
-            prog.store((f"y{i}_re", f"y{i}_im"), np.stack([a, a + 1]),
-                       blocking=True)
-
+                         "tw_base": 2 * n if tw_base is None else tw_base})
+    prog.instrs = list(iter_fft_instrs(n, radix, tw_base))
     return prog
 
 

@@ -21,9 +21,14 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.memsim import LANES
-from repro.isa.assembler import Program
+from repro.isa.assembler import Compute, MemLoad, MemStore, Program
 
 MAX_BLOCK = 1024
+
+
+def transpose_n_threads(n: int) -> int:
+    """Threads per program block (blocks cap at MAX_BLOCK threads)."""
+    return min(MAX_BLOCK, n * n)
 
 
 def _in_addr(t: np.ndarray, n: int) -> np.ndarray:
@@ -41,27 +46,41 @@ def _out_addr(t: np.ndarray, n: int, out_base: int) -> np.ndarray:
     return out_base + c * n + r
 
 
-def transpose_program(n: int) -> Program:
-    """Build the N×N transpose macro-op program (input at 0, output at N²)."""
+def iter_transpose_instrs(n: int):
+    """Lazily yield the N×N transpose macro-ops one at a time.
+
+    The single source of the program's content: ``transpose_program``
+    materializes this iterator into a ``Program`` (for functional runs),
+    while the streaming trace pipeline lowers it block-by-block
+    (``isa.vm.instr_trace_blocks``) so a million-op transpose trace is
+    constructed AND costed in O(block) memory — the per-block address
+    vectors are computed from the closed-form thread→element mapping only
+    when their block is drawn.
+    """
     total = n * n
     out_base = total
-    t_block = min(MAX_BLOCK, total)
-    n_blocks = total // t_block
-    prog = Program(f"transpose{n}x{n}", n_threads=t_block,
-                   meta={"n": n, "out_base": out_base, "blocks": n_blocks})
+    t_block = transpose_n_threads(n)
 
     # Address-generation template (calibrated to Table II's 32×32 Common Ops:
     # 4 INT + 2 IMM vector instructions + 1 scalar IMM + 6 scalar-cycle other).
-    prog.compute({"imm": 2}, label="load base pointers")
-    prog.compute({"int": 4}, label="lane/op address arithmetic")
-    prog.compute({"imm": 1, "other": 6}, scalar=True, label="control")
+    yield Compute({"imm": 2}, label="load base pointers")
+    yield Compute({"int": 4}, label="lane/op address arithmetic")
+    yield Compute({"imm": 1, "other": 6}, scalar=True, label="control")
 
-    for b in range(n_blocks):
+    for b in range(total // t_block):
         t = np.arange(b * t_block, (b + 1) * t_block, dtype=np.int64)
-        la = _in_addr(t, n)
-        sa = _out_addr(t, n, out_base)
-        prog.load("v", la)
-        prog.store("v", sa)
+        yield MemLoad("v", np.asarray(_in_addr(t, n), np.int32))
+        yield MemStore("v", np.asarray(_out_addr(t, n, out_base), np.int32))
+
+
+def transpose_program(n: int) -> Program:
+    """Build the N×N transpose macro-op program (input at 0, output at N²)."""
+    total = n * n
+    t_block = transpose_n_threads(n)
+    prog = Program(f"transpose{n}x{n}", n_threads=t_block,
+                   meta={"n": n, "out_base": total,
+                         "blocks": total // t_block})
+    prog.instrs = list(iter_transpose_instrs(n))
     return prog
 
 

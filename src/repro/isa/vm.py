@@ -3,24 +3,27 @@ any memory architecture (banked or multi-port).
 
 Functional state: a flat float32 word memory (``repro.core.memsim.Memory``)
 plus a per-thread register file (numpy, vectorized over threads).  Timing:
-the program is first lowered to the **same first-class ``AddressTrace``**
-the kernel registry's ``trace`` generators emit
-(``AddressTrace.from_program``), then costed in one shot by
-``MemoryArchitecture.cost`` — so kernel-derived and VM-derived cycle counts
-share a single timing path and cross-validate on the Table II/III programs.
+the program lowers to the **same first-class ``repro.core.trace.Trace``**
+the kernel registry's generators emit — streamed block-by-block
+(``instr_trace_blocks`` / ``program_trace_stream``) as the instruction list
+is walked, never concatenated into one dense (ops × 16) matrix — then
+costed by ``MemoryArchitecture.cost``.  Kernel-derived and VM-derived cycle
+counts therefore share a single timing path and cross-validate on the
+Table II/III programs.
 
-``run_program`` returns the final memory (for oracle checks), the trace it
-costed, and a ``TraceCost`` identical in structure to the rows of
-Tables II/III.
+``run_program`` returns the final memory (for oracle checks), the trace
+stream it costed (``VMResult.trace_stream``; ``VMResult.trace``
+materializes the dense ``AddressTrace`` on demand), and a ``TraceCost``
+identical in structure to the rows of Tables II/III.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.memsim import MemSpec, TraceCost
-from repro.core.trace import AddressTrace
+from repro.core.memsim import LANES, MemSpec, TraceCost
+from repro.core.trace import AddressTrace, TraceStream, iter_op_chunks
 from repro.isa.assembler import Compute, MemLoad, MemStore, Program
 
 
@@ -30,7 +33,17 @@ class VMResult:
     regs: dict                # final register file
     cost: TraceCost
     fmax_mhz: float
-    trace: AddressTrace | None = None   # the costed address trace
+    #: the costed Trace (lazy; one block at a time — see module docstring)
+    trace_stream: TraceStream | None = None
+    _trace: AddressTrace | None = field(default=None, repr=False)
+
+    @property
+    def trace(self) -> AddressTrace | None:
+        """The costed address trace, materialized on demand (the VM costs
+        the stream; the dense concatenation exists only if you ask)."""
+        if self._trace is None and self.trace_stream is not None:
+            self._trace = self.trace_stream.materialize()
+        return self._trace
 
     @property
     def total_cycles(self) -> int:
@@ -41,9 +54,49 @@ class VMResult:
         return self.cost.time_us(self.fmax_mhz)
 
 
+def instr_trace_blocks(instrs, n_threads: int, block_ops: int | None = None):
+    """Lower a macro-op instruction iterable to ``TraceStream`` source
+    blocks as it is consumed — the streaming construction path.
+
+    One memory instruction becomes one run of at-most-``block_ops``-op
+    blocks (continuation chunks ``instr_carry``-marked, so the instruction's
+    controller overhead is charged once; see ``repro.core.trace``); one
+    compute bundle becomes a memory-less block carrying its cycle/op-count
+    contribution (the same ``Σcounts × T/16`` accounting as
+    ``TraceBuilder.compute``).  Costing the blocks is bit-equal to costing
+    ``AddressTrace.from_program`` of the same instructions.
+    """
+    for ins in instrs:
+        if isinstance(ins, MemLoad):
+            kind = "tw" if ins.space == "TW" else "load"
+            yield from iter_op_chunks(ins.addrs, kind, block_ops=block_ops)
+        elif isinstance(ins, MemStore):
+            yield from iter_op_chunks(ins.addrs, "store", block_ops=block_ops)
+        elif isinstance(ins, Compute):
+            per = 1 if ins.scalar else max(1, n_threads // LANES)
+            cycles = sum(ins.counts.values()) * per
+            counts = {k: v * per for k, v in ins.counts.items()}
+            yield AddressTrace.empty().with_compute(cycles, counts)
+        else:  # pragma: no cover
+            raise TypeError(f"unknown instruction {ins!r}")
+
+
+def program_trace_stream(program: Program,
+                         block_ops: int | None = None) -> TraceStream:
+    """A macro-op program's address trace as a lazy, re-iterable
+    ``TraceStream`` (pure function of the program — cost it under any
+    architecture with ``arch.cost`` / ``cost_many`` without ever holding
+    more than one block)."""
+    return TraceStream(
+        lambda: instr_trace_blocks(program.instrs, program.n_threads,
+                                   block_ops),
+        meta={"program": program.name, **program.meta})
+
+
 def program_trace(program: Program) -> AddressTrace:
-    """Lower a macro-op program to its AddressTrace (pure function of the
-    program; cost it under any architecture with ``arch.cost``)."""
+    """Lower a macro-op program to its dense AddressTrace (the
+    materialization of ``program_trace_stream``; prefer the stream for
+    costing — it is bit-equal and O(block) in memory)."""
     return AddressTrace.from_program(program)
 
 
@@ -56,8 +109,8 @@ def run_program(program: Program, spec: MemSpec, init_memory: np.ndarray,
     """
     from repro.core import arch as _arch
 
-    trace = program_trace(program)
-    cost = _arch.from_spec(spec).cost(trace)
+    stream = program_trace_stream(program)
+    cost = _arch.from_spec(spec).cost(stream)
 
     mem = np.array(init_memory, np.float32, copy=True)
     regs: dict = {}
@@ -84,10 +137,11 @@ def run_program(program: Program, spec: MemSpec, init_memory: np.ndarray,
                 raise TypeError(f"unknown instruction {instr!r}")
 
     return VMResult(memory=mem, regs=regs, cost=cost, fmax_mhz=spec.fmax_mhz,
-                    trace=trace)
+                    trace_stream=stream)
 
 
 def cost_only(program: Program, spec: MemSpec) -> TraceCost:
-    """Timing-only pass (no functional execution, no memory needed)."""
+    """Timing-only pass (no functional execution, no memory needed) —
+    streams the program's blocks straight into the cost engine."""
     from repro.core import arch as _arch
-    return _arch.from_spec(spec).cost(program_trace(program))
+    return _arch.from_spec(spec).cost(program_trace_stream(program))

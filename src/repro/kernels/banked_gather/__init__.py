@@ -1,5 +1,6 @@
 from repro.kernels.banked_gather.ops import (banked_gather,
                                              banked_gather_trace,
+                                             banked_gather_trace_blocks,
                                              to_banked_layout,
                                              from_banked_layout)
 from repro.kernels.banked_gather.ref import banked_gather_ref
@@ -28,6 +29,7 @@ register(Kernel(
     pallas=_run,
     ref=lambda arch, table, idx, **_: banked_gather_ref(table, idx),
     trace=banked_gather_trace,
+    blocks=banked_gather_trace_blocks,
     description="bank-major row gather (embedding / paged KV read path)",
 ))
 

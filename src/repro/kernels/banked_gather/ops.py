@@ -42,6 +42,16 @@ def banked_gather_trace(arch, table, idx, mask=None, **_):
     return row_stream_trace(idx, kind="load", mask=mask)
 
 
+def banked_gather_trace_blocks(arch, table, idx, mask=None, block_ops=None,
+                               **_):
+    """Streaming counterpart of ``banked_gather_trace``: the same ONE load
+    instruction, yielded as at-most-``block_ops``-op blocks (a million-index
+    gather never shapes its full (ops × 16) matrix; costs bit-equal)."""
+    from repro.kernels.registry import row_stream_blocks
+    yield from row_stream_blocks(idx, kind="load", mask=mask,
+                                 block_ops=block_ops)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_banks", "mapping", "shift",
                                     "interpret"))

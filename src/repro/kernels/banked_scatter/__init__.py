@@ -1,5 +1,6 @@
 from repro.kernels.banked_scatter.ops import (banked_scatter,
-                                              banked_scatter_trace)
+                                              banked_scatter_trace,
+                                              banked_scatter_trace_blocks)
 from repro.kernels.banked_scatter.ref import banked_scatter_ref
 from repro.kernels.registry import Kernel, register
 
@@ -28,6 +29,7 @@ register(Kernel(
     ref=lambda arch, table, idx, updates, **_: banked_scatter_ref(
         table, idx, updates),
     trace=banked_scatter_trace,
+    blocks=banked_scatter_trace_blocks,
     description="bank-major row scatter (paged KV write path)",
 ))
 

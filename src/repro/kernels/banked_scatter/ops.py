@@ -16,6 +16,15 @@ def banked_scatter_trace(arch, table, idx, updates=None, mask=None, **_):
     return row_stream_trace(idx, kind="store", mask=mask)
 
 
+def banked_scatter_trace_blocks(arch, table, idx, updates=None, mask=None,
+                                block_ops=None, **_):
+    """Streaming counterpart of ``banked_scatter_trace``: the same ONE store
+    instruction as at-most-``block_ops``-op blocks (bit-equal costing)."""
+    from repro.kernels.registry import row_stream_blocks
+    yield from row_stream_blocks(idx, kind="store", mask=mask,
+                                 block_ops=block_ops)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_banks", "mapping", "shift",
                                     "interpret"))

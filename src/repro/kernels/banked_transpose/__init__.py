@@ -1,5 +1,6 @@
 from repro.kernels.banked_transpose.ops import (banked_transpose,
-                                                banked_transpose_trace)
+                                                banked_transpose_trace,
+                                                banked_transpose_trace_blocks)
 from repro.kernels.banked_transpose.ref import banked_transpose_ref
 from repro.kernels.registry import Kernel, register
 
@@ -8,6 +9,7 @@ register(Kernel(
     pallas=lambda arch, x, **kw: banked_transpose(x, **kw),
     ref=lambda arch, x, **_: banked_transpose_ref(x),
     trace=banked_transpose_trace,
+    blocks=banked_transpose_trace_blocks,
     description="VMEM-tiled matrix transpose (paper Table II workload)",
 ))
 

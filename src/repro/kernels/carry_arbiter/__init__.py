@@ -1,5 +1,6 @@
 from repro.kernels.carry_arbiter.ops import (carry_arbiter,
-                                             carry_arbiter_trace)
+                                             carry_arbiter_trace,
+                                             carry_arbiter_trace_blocks)
 from repro.kernels.carry_arbiter.ref import carry_arbiter_ref
 from repro.kernels.registry import Kernel, register
 
@@ -8,6 +9,7 @@ register(Kernel(
     pallas=lambda arch, requests, **kw: carry_arbiter(requests, **kw),
     ref=lambda arch, requests, **_: carry_arbiter_ref(requests),
     trace=carry_arbiter_trace,
+    blocks=carry_arbiter_trace_blocks,
     description="carry-chain arbiter grant-schedule generator (paper Fig 4)",
 ))
 

@@ -1,5 +1,6 @@
 from repro.kernels.conflict_popcount.ops import (conflict_popcount,
-                                                 conflict_popcount_trace)
+                                                 conflict_popcount_trace,
+                                                 conflict_popcount_trace_blocks)
 from repro.kernels.conflict_popcount.ref import conflict_popcount_ref
 from repro.kernels.registry import Kernel, register
 
@@ -23,6 +24,7 @@ register(Kernel(
     ref=lambda arch, banks, n_banks=None, **_: conflict_popcount_ref(
         banks, _n_banks(arch, n_banks)),
     trace=conflict_popcount_trace,
+    blocks=conflict_popcount_trace_blocks,
     description="issue-controller conflict counting (one-hot popcount + max)",
 ))
 

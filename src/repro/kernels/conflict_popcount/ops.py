@@ -16,6 +16,15 @@ def conflict_popcount_trace(arch, banks, n_banks=None, **_):
     return AddressTrace.from_ops(banks, kind="load")
 
 
+def conflict_popcount_trace_blocks(arch, banks, n_banks=None, block_ops=None,
+                                   **_):
+    """Streaming counterpart of ``conflict_popcount_trace``: the bank-id
+    matrix chunked to at-most-``block_ops``-op blocks of the same one load
+    instruction (bit-equal costing)."""
+    from repro.core.trace import iter_op_chunks
+    yield from iter_op_chunks(banks, kind="load", block_ops=block_ops)
+
+
 @functools.partial(jax.jit, static_argnames=("n_banks", "interpret"))
 def conflict_popcount(banks: jnp.ndarray, n_banks: int = 16,
                       interpret: bool = True):

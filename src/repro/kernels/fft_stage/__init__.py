@@ -1,5 +1,5 @@
 from repro.kernels.fft_stage.ops import (fft4096_radix4, fft_stage_radix4,
-                                         fft_trace)
+                                         fft_trace, fft_trace_blocks)
 from repro.kernels.fft_stage.ref import fft_oracle_digit_reversed
 from repro.kernels.registry import Kernel, register
 
@@ -17,6 +17,7 @@ register(Kernel(
     pallas=lambda arch, x, **kw: fft4096_radix4(x, n=x.shape[-1], **kw),
     ref=_ref,
     trace=fft_trace,
+    blocks=fft_trace_blocks,
     description="radix-4 DIF FFT stages (paper Table III workload)",
 ))
 

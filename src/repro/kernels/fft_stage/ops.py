@@ -49,6 +49,22 @@ def fft_trace(arch, x, **_):
     return AddressTrace.from_program(prog)
 
 
+def fft_trace_blocks(arch, x, block_ops=None, **_):
+    """Streaming counterpart of ``fft_trace``: the Table III program stream
+    emitted block-by-block from the lazy pass-by-pass macro-op iterator
+    (each DIF pass's address vectors live only while its blocks are drawn);
+    costs bit-equal to the dense trace at any block size."""
+    from repro.isa.programs.fft import iter_fft_instrs
+    from repro.isa.vm import instr_trace_blocks
+    n = x.shape[-1]
+    try:
+        instrs = iter_fft_instrs(n, 4)
+    except ValueError as e:
+        raise NotImplementedError(str(e)) from None
+    yield from instr_trace_blocks(instrs, n_threads=n // 4,
+                                  block_ops=block_ops)
+
+
 def fft4096_radix4(x: jnp.ndarray, n: int = 4096,
                    interpret: bool = True) -> jnp.ndarray:
     """(batch, n) complex64 -> FFT in digit-reversed order (batch, n)."""

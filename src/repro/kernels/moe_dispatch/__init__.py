@@ -1,5 +1,6 @@
 from repro.kernels.moe_dispatch.ops import (moe_dispatch_positions,
-                                            moe_dispatch_trace)
+                                            moe_dispatch_trace,
+                                            moe_dispatch_trace_blocks)
 from repro.kernels.moe_dispatch.ref import moe_dispatch_ref
 from repro.kernels.registry import Kernel, register
 
@@ -10,6 +11,7 @@ register(Kernel(
     ref=lambda arch, experts, n_experts, capacity, **_:
         moe_dispatch_ref(experts, n_experts, capacity),
     trace=moe_dispatch_trace,
+    blocks=moe_dispatch_trace_blocks,
     description="running-count MoE token dispatch (arbiter math at scale)",
 ))
 

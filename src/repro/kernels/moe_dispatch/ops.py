@@ -16,6 +16,15 @@ def moe_dispatch_trace(arch, experts, n_experts, capacity, **_):
     return row_stream_trace(experts, kind="store")
 
 
+def moe_dispatch_trace_blocks(arch, experts, n_experts, capacity,
+                              block_ops=None, **_):
+    """Streaming counterpart of ``moe_dispatch_trace``: the expert-id
+    stream as at-most-``block_ops``-op blocks of the same one store
+    instruction (bit-equal costing, O(block) construction)."""
+    from repro.kernels.registry import row_stream_blocks
+    yield from row_stream_blocks(experts, kind="store", block_ops=block_ops)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_experts", "capacity", "interpret"))
 def moe_dispatch_positions(experts: jnp.ndarray, n_experts: int,

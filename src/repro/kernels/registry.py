@@ -13,6 +13,10 @@ ships, behind one common signature whose first argument is a
     memory.  ``arch.cost(trace)`` is the timing model; ``cost_cycles`` is
     the one-call convenience over both.  Optional — raises
     NotImplementedError when a kernel has no meaningful address stream.
+  * ``blocks(arch, *args, block_ops=…)`` — the same request stream emitted
+    block-by-block (``TraceStream`` source blocks), so the trace is
+    *constructed* in O(block) memory, not just costed that way.  Optional —
+    ``trace_blocks`` falls back to chunking the dense ``trace``.
 
 Usage::
 
@@ -21,15 +25,19 @@ Usage::
     out = k.run(arch.get("16B-offset"), table, idx)
     t = k.address_trace("16B-offset", table, idx)     # first-class artifact
     cyc = arch.get("4B").cost(t).total_cycles         # cost anywhere
+    s = k.trace_blocks("16B", table, idx, block_ops=4096)   # lazy Trace
+    cyc = arch.get("4B").cost(s).total_cycles         # bit-equal, O(block)
 
 New kernels are one decorator away::
 
-    @register_kernel("my_kernel", ref=my_ref, trace=my_trace)
+    @register_kernel("my_kernel", ref=my_ref, trace=my_trace,
+                     blocks=my_trace_blocks)
     def my_pallas(arch, x):
         ...
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Callable
 
@@ -43,6 +51,8 @@ class Kernel:
     pallas: Callable
     ref: Callable
     trace: Callable | None = None    # (arch, *args) -> AddressTrace
+    #: (arch, *args, block_ops=…) -> iterator of TraceStream source blocks
+    blocks: Callable | None = None
     cost: Callable | None = None     # legacy opaque override; prefer trace
     description: str = ""
 
@@ -60,6 +70,28 @@ class Kernel:
             raise NotImplementedError(
                 f"kernel {self.name!r} has no address-trace generator")
         return self.trace(_arch.resolve(arch), *args, **kwargs)
+
+    def trace_blocks(self, arch, *args, block_ops: int | None = None,
+                     **kwargs):
+        """The same request stream as ``address_trace``, but as a lazy,
+        re-iterable ``repro.core.trace.Trace`` of at-most-``block_ops``-op
+        blocks — bit-equal to the dense trace under ``arch.cost`` /
+        ``cost_many`` at any block size (the streaming-pipeline invariant,
+        pinned in tests/test_cost_engine.py).
+
+        Kernels registered with a native ``blocks`` generator construct the
+        stream in O(block) memory; the rest fall back to a dense-chunking
+        shim (build ``trace`` once, chunk it lazily)."""
+        from repro.core.trace import TraceStream
+        a = _arch.resolve(arch)
+        meta = {"kernel": self.name, "block_ops": block_ops}
+        if self.blocks is not None:
+            return TraceStream(
+                functools.partial(self.blocks, a, *args,
+                                  block_ops=block_ops, **kwargs),
+                meta={**meta, "streamed": True})
+        t = self.address_trace(a, *args, **kwargs)   # dense-chunking shim
+        return TraceStream(functools.partial(t.blocks, block_ops), meta=meta)
 
     def cost_cycles(self, arch, *args, **kwargs):
         """Cycles this operation costs under ``arch``'s timing model
@@ -91,13 +123,15 @@ def register(kernel: Kernel) -> Kernel:
 
 def register_kernel(name: str, *, ref: Callable,
                     trace: Callable | None = None,
+                    blocks: Callable | None = None,
                     cost: Callable | None = None,
                     description: str = "") -> Callable:
     """Decorator form: registers the decorated function as the Pallas entry
     point of a new Kernel and returns the Kernel."""
     def deco(pallas: Callable) -> Kernel:
         return register(Kernel(name=name, pallas=pallas, ref=ref, trace=trace,
-                               cost=cost, description=description))
+                               blocks=blocks, cost=cost,
+                               description=description))
     return deco
 
 
@@ -136,6 +170,16 @@ def row_stream_trace(idx, kind: str = "load", mask=None):
 
     from repro.core.trace import AddressTrace
     return AddressTrace.from_stream(np.asarray(idx), kind=kind, mask=mask)
+
+
+def row_stream_blocks(idx, kind: str = "load", mask=None,
+                      block_ops: int | None = None):
+    """Streaming counterpart of ``row_stream_trace``: the same ONE
+    instruction yielded as at-most-``block_ops``-op blocks (continuation
+    chunks ``instr_carry``-marked — the instruction overhead is charged
+    once, and costing is bit-equal to the dense trace)."""
+    from repro.core.trace import iter_op_chunks
+    return iter_op_chunks(idx, kind, mask=mask, block_ops=block_ops)
 
 
 def row_stream_cost(arch, idx, is_write: bool) -> int:

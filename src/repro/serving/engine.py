@@ -323,12 +323,13 @@ class ServeEngine:
 
     def serving_stream(self, include_prefill: bool = True):
         """The last generation's KV traffic as a lazy
-        ``repro.core.trace.TraceStream`` of per-step blocks — the input the
-        batched cost engine consumes in O(block) memory (long generations
-        never concatenate into one dense matrix)."""
+        ``repro.core.trace.TraceStream`` of per-step blocks — the shared
+        ``Trace`` protocol the batched cost engine consumes in O(block)
+        memory (long generations never concatenate into one dense matrix).
+        The recorded step list is passed directly; the stream is re-iterable
+        by construction."""
         from repro.core.trace import TraceStream
-        chunks = self._trace_chunks(include_prefill)
-        return TraceStream(lambda: iter(chunks),
+        return TraceStream(self._trace_chunks(include_prefill),
                            meta={"what": "serving-live",
                                  "arch": self.mem_arch.name,
                                  "steps": len(self._step_traces)})

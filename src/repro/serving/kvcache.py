@@ -364,15 +364,17 @@ def simulate_serving_stream(arch, batch: int, prompt_len: int,
                             n_kv_layers: int = 1, max_seq: int | None = None,
                             include_prefill: bool = True):
     """The serving traffic of a (batch, context) point as a lazy
-    ``repro.core.trace.TraceStream``: one block per prefill ingest / decode
+    ``repro.core.trace.TraceStream`` — the unified ``Trace`` protocol every
+    cost consumer speaks: one source block per prefill ingest / decode
     step, produced on demand with pages allocated by the same arbiter the
     live engine uses.
 
     This is the O(block)-memory lowering — ``cost_many(archs, stream)``
+    (and ``bench.serving_workload``, whose cached lowering is this stream)
     prices million-op serving traces without ever materializing the dense
-    (ops × 16) matrix that ``simulate_serving_trace`` (the concatenation of
-    this stream) builds.  The stream is re-iterable: each iteration replays
-    the allocator from scratch, so blocks need not be held alive.
+    (ops × 16) matrix that ``simulate_serving_trace`` (the materialization
+    of this stream) builds.  The stream is re-iterable: each iteration
+    replays the allocator from scratch, so blocks need not be held alive.
 
     The traffic is architecture-DEPENDENT (the allocator places pages per
     the arch's bank map), which is why ``bench.TraceWorkload`` re-lowers it

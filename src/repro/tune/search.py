@@ -1,9 +1,11 @@
 """Architecture autotuner — layer 4 of the public API (see README.md).
 
 ``search`` sweeps the memory-architecture space (bank count × bank map ×
-broadcast, plus the multi-port family) for the cheapest architecture on one
-workload, costing first-class ``AddressTrace``s through the same
-``MemoryArchitecture.cost`` path as the benchmark sweep and the ISA VM.
+broadcast × offset-map shift, plus the multi-port family) for the cheapest
+architecture on one workload, costing first-class ``repro.core.trace``
+artifacts — streamed block-by-block through the same
+``MemoryArchitecture.cost`` / ``cost_many`` path as the benchmark sweep and
+the ISA VM, never densified.
 
 Workloads come in three forms:
 
@@ -43,21 +45,35 @@ from repro.core import arch as _arch
 
 @dataclass(frozen=True)
 class ArchSpace:
-    """The searchable architecture grid.  ``banks``/``mappings``/``broadcast``
-    span the banked lattice; ``multiports`` are standalone points."""
+    """The searchable architecture grid.
+    ``banks``/``mappings``/``broadcast``/``map_shifts`` span the banked
+    lattice; ``multiports`` are standalone points.
+
+    ``map_shifts`` (the ROADMAP dimension) only applies to the ``offset``
+    map — the bank bits sit at ``[shift+log2B-1 : shift]`` — so other
+    mappings contribute one point per (banks, mapping, broadcast) cell
+    regardless of the shift grid.  Shifted points are named
+    ``{B}B-offset-s{K}`` (shift-1 keeps the paper's short name)."""
     banks: tuple = (4, 8, 16)
     mappings: tuple = ("lsb", "offset")
     broadcast: tuple = (False,)
     multiports: tuple = ("4R-1W", "4R-2W", "4R-1W-VB")
+    map_shifts: tuple = (1,)
 
     @staticmethod
-    def banked_name(banks: int, mapping: str, bcast: bool) -> str:
+    def banked_name(banks: int, mapping: str, bcast: bool,
+                    shift: int = 1) -> str:
         name = f"{banks}B" + ("" if mapping == "lsb" else f"-{mapping}")
+        if mapping == "offset" and shift != 1:
+            name += f"-s{shift}"
         return name + ("-bcast" if bcast else "")
 
+    def _shifts(self, mapping: str) -> tuple:
+        return self.map_shifts if mapping == "offset" else (1,)
+
     def banked_points(self) -> list:
-        return [(b, m, bc) for b in self.banks for m in self.mappings
-                for bc in self.broadcast]
+        return [(b, m, bc, sh) for b in self.banks for m in self.mappings
+                for bc in self.broadcast for sh in self._shifts(m)]
 
     def names(self) -> list:
         return ([self.banked_name(*p) for p in self.banked_points()]
@@ -65,33 +81,46 @@ class ArchSpace:
 
     def start_point(self) -> tuple:
         """Deterministic hillclimb start: middle of the bank grid, first
-        mapping, no broadcast."""
+        mapping (at its first shift), no broadcast."""
         banks = sorted(self.banks)
-        return (banks[len(banks) // 2], self.mappings[0], self.broadcast[0])
+        m = self.mappings[0]
+        return (banks[len(banks) // 2], m, self.broadcast[0],
+                self._shifts(m)[0])
 
     def neighbors(self, point: tuple) -> list:
         """Lattice moves: bank count one step up/down, any other bank map,
-        broadcast toggled.  Deterministic order."""
-        b, m, bc = point
+        offset shift one step up/down, broadcast toggled.  Deterministic
+        order."""
+        b, m, bc, sh = point
         banks = sorted(self.banks)
         i = banks.index(b)
         out = []
         if i + 1 < len(banks):
-            out.append((banks[i + 1], m, bc))
+            out.append((banks[i + 1], m, bc, sh))
         if i > 0:
-            out.append((banks[i - 1], m, bc))
-        out.extend((b, m2, bc) for m2 in self.mappings if m2 != m)
-        out.extend((b, m, bc2) for bc2 in self.broadcast if bc2 != bc)
+            out.append((banks[i - 1], m, bc, sh))
+        out.extend((b, m2, bc, self._shifts(m2)[0])
+                   for m2 in self.mappings if m2 != m)
+        if m == "offset":
+            shifts = sorted(self.map_shifts)
+            j = shifts.index(sh)
+            if j + 1 < len(shifts):
+                out.append((b, m, bc, shifts[j + 1]))
+            if j > 0:
+                out.append((b, m, bc, shifts[j - 1]))
+        out.extend((b, m, bc2, sh) for bc2 in self.broadcast if bc2 != bc)
         return out
 
 
 #: the paper's own comparison surface (Tables II/III: 9 architectures)
 PAPER_SPACE = ArchSpace()
 
-#: beyond-paper grid: anti-stride maps, broadcast coalescing, wider banking
+#: beyond-paper grid: anti-stride maps, broadcast coalescing, wider banking,
+#: shifted offset maps (the map_shift search dimension)
 EXTENDED_SPACE = ArchSpace(banks=(4, 8, 16, 32),
                            mappings=("lsb", "offset", "xor", "fold"),
-                           broadcast=(False, True))
+                           broadcast=(False, True),
+                           map_shifts=(1, 2))
 
 
 @dataclass(frozen=True)
@@ -142,14 +171,16 @@ def _evaluator(kernel, workload):
         kernel = registry.get(kernel)
     args = tuple(workload) if isinstance(workload, (tuple, list)) else (
         workload,)
-    cached = []   # AddressTraces are logical-address streams, architecture-
-    # independent by design — generate once, cost under every point
+    cached = []   # kernel traces are logical-address streams, architecture-
+    # independent by design — build the lazy block lowering once
+    # (kernel.trace_blocks: the unified Trace protocol, O(block) memory),
+    # cost it under every point
 
     def ev_many(names) -> list:
         from repro.core.cost_engine import cost_many
         arch_objs = [_arch.resolve(n) for n in names]
         if not cached:
-            cached.append(kernel.address_trace(arch_objs[0], *args))
+            cached.append(kernel.trace_blocks(arch_objs[0], *args))
         costs = cost_many(arch_objs, cached[0])
         return [{"workload": kernel.name, "arch": a.name,
                  "kind": a.spec.kind, "fmax_mhz": a.fmax_mhz,

@@ -119,16 +119,21 @@ def test_chunked_costing_masked_serving_trace():
         assert cost_many(archs, t, block_ops=block) == dense
 
 
-def test_raw_iter_blocks_iterator_rejected_as_stream():
-    """Feeding iter_blocks views to cost_many as if they were a TraceStream
-    would double-charge boundary instructions and drop compute metadata —
-    the engine rejects it and points at block_ops (costing a single view
-    directly stays allowed: it is a well-defined standalone trace)."""
+def test_raw_iter_blocks_iterator_is_a_valid_stream_source():
+    """Tentpole invariant: the unified Trace protocol removed the old
+    iter_blocks-view rejection.  Views are instr_carry-marked at cut
+    boundaries, so feeding the raw iterator to cost_many charges the cut
+    instruction's overhead once and is memory-side bit-equal to dense
+    costing (views carry no compute — ``blocks()`` carries it too)."""
     t = AddressTrace.from_stream(np.arange(48), "load").with_compute(
         100, {"fp": 60})
     a16 = arch.get("16B")
-    with pytest.raises(ValueError, match="block_ops"):
-        cost_many([a16], t.iter_blocks(2))
+    dense = cost_many([a16], t)[0]
+    via_views = cost_many([a16], t.iter_blocks(2))[0]
+    assert via_views.load_cycles == dense.load_cycles
+    assert via_views.n_load_ops == dense.n_load_ops
+    # the full protocol (blocks) additionally preserves compute metadata
+    assert cost_many([a16], t.blocks(2))[0] == dense
     blk = next(t.iter_blocks(2))
     assert a16.cost(blk).load_cycles == a16.cost(t[:2]).load_cycles
 
@@ -189,7 +194,193 @@ def test_streaming_million_op_trace_stays_block_bounded():
     assert total.n_load_ops == n_blocks * one.n_load_ops
 
 
+# -------------------------------- (b2) streamed CONSTRUCTION == dense --
+# Block-size invariance of kernel-GENERATED streams (the tentpole's
+# construction-side counterpart of the chunked-costing tests above).
+
+def test_kernel_stream_construction_bit_equal_transpose_table2():
+    """Every Table II point: the banked_transpose kernel's native
+    trace_blocks stream (block_ops ∈ {1, 7, 64, n}) costs bit-equal to its
+    dense trace() under all eight Table II memories — and the stream is
+    re-iterable (a second pass agrees)."""
+    from repro import kernels
+    k = kernels.get("banked_transpose")
+    archs = list(TRANSPOSE_ARCHITECTURES)
+    for n in (32, 64, 128):
+        x = np.zeros((n, n), np.float32)
+        dense_t = k.address_trace(archs[0], x)
+        dense = cost_many(archs, dense_t)
+        blocks = (1, 7, 64, dense_t.n_ops) if n == 32 else (64, None)
+        for bo in blocks:
+            s = k.trace_blocks(archs[0], x, block_ops=bo)
+            assert cost_many(archs, s) == dense, (n, bo)
+        if n == 32:     # re-iterability: generator-function-backed stream
+            s = k.trace_blocks(archs[0], x, block_ops=7)
+            assert cost_many(archs, s) == cost_many(archs, s)
+
+
+def test_kernel_stream_construction_bit_equal_fft_radix4():
+    from repro import kernels
+    k = kernels.get("fft_stage")
+    archs = list(PAPER_ARCHITECTURES)
+    x = np.zeros((1, 4096), np.complex64)
+    dense = cost_many(archs, k.address_trace(archs[0], x))
+    for bo in (7, 64, None):
+        assert cost_many(archs, k.trace_blocks(archs[0], x, block_ops=bo)) \
+            == dense, bo
+
+
+@pytest.mark.parametrize("radix", (4, 8, 16))
+def test_program_stream_construction_bit_equal_table3(radix):
+    """Every Table III point: the VM's streaming lowering
+    (program_trace_stream — what run_program and bench.sweep now cost)
+    equals the dense AddressTrace.from_program path bit-exactly."""
+    from repro.isa.vm import program_trace, program_trace_stream
+    prog = fft_workload(4096, radix).program
+    archs = list(PAPER_ARCHITECTURES)
+    dense = cost_many(archs, program_trace(prog))
+    for bo in (64, None):
+        assert cost_many(archs, program_trace_stream(prog, bo)) == dense, bo
+
+
+def test_row_stream_kernels_stream_bit_equal():
+    """gather/scatter/moe/popcount/arbiter: native block generators chunk
+    ONE instruction (instr_carry continuation) and cost bit-equal to the
+    dense row-stream trace, masks included."""
+    from repro import kernels
+    rng = np.random.default_rng(11)
+    idx = rng.integers(0, 512, 1000)
+    mask = rng.random(1000) > 0.2
+    cases = [("banked_gather", (None, idx), {"mask": mask}),
+             ("banked_scatter", (None, idx), {"mask": mask}),
+             ("moe_dispatch", (idx % 16, 16, 64), {}),
+             ("conflict_popcount", (rng.integers(0, 16, (37, 16)),), {}),
+             ("carry_arbiter",
+              (rng.integers(1, 2 ** 16, (23, 16)).astype(np.uint32),), {})]
+    archs = [arch.get(n) for n in ("16B", "8B-offset", "4R-2W", "4R-1W-VB")]
+    for name, args, kw in cases:
+        k = kernels.get(name)
+        dense_t = k.address_trace(archs[0], *args, **kw)
+        dense = cost_many(archs, dense_t)
+        # one instruction regardless of chunking
+        assert dense_t.n_instructions == 1
+        for bo in (1, 7, 64, None):
+            got = cost_many(archs, k.trace_blocks(archs[0], *args,
+                                                  block_ops=bo, **kw))
+            assert got == dense, (name, bo)
+
+
+def test_stream_generators_reject_nonpositive_block_ops():
+    """Every streaming path raises on block_ops <= 0 — none silently yields
+    empty blocks (which would cost 0 cycles without an error)."""
+    from repro import kernels
+    from repro.core.trace import iter_op_chunks
+    req = np.ones((4, 16), np.uint32)
+    with pytest.raises(ValueError):
+        list(kernels.get("carry_arbiter").trace_blocks(
+            "16B", req, block_ops=0).blocks())
+    with pytest.raises(ValueError):
+        list(iter_op_chunks(np.arange(32), block_ops=0))
+    with pytest.raises(ValueError):
+        list(AddressTrace.from_stream(np.arange(32)).blocks(-1))
+
+
+def test_kernel_stream_blocks_are_block_bounded():
+    """Structural O(block) check: no yielded block exceeds block_ops ops,
+    and the blocks partition the dense op stream exactly."""
+    from repro import kernels
+    k = kernels.get("banked_transpose")
+    x = np.zeros((256, 256), np.float32)
+    s = k.trace_blocks("16B", x, block_ops=64)
+    sizes = [b.n_ops for b in s.blocks()]
+    assert max(sizes) <= 64
+    assert sum(sizes) == k.address_trace("16B", x).n_ops
+
+
+def test_trace_stream_one_shot_iterator_stays_lazy_but_loud():
+    """Satellite regression: a bare generator (one-shot iterator) passed to
+    TraceStream used to silently yield nothing on the second iteration (a
+    0-cycle cost with no error).  It now stays LAZY — blocks are drawn one
+    at a time, preserving the O(block) contract — and a second pass raises
+    instead of lying; sequence- and callable-backed streams re-iterate."""
+    from repro.core.trace import TraceStream as TS
+
+    drawn = []
+
+    def gen():
+        for i in range(3):
+            drawn.append(i)
+            yield AddressTrace.from_stream(np.arange(32) + i, "load")
+
+    s = TS(gen())                       # called generator: one-shot source
+    assert drawn == []                  # construction consumed nothing
+    a16 = arch.get("16B")
+    first = cost_many([a16], s)[0]
+    assert first.n_load_ops == 6        # 3 blocks × 2 ops — not 0
+    assert drawn == [0, 1, 2]
+    with pytest.raises(RuntimeError, match="one-shot"):
+        cost_many([a16], s)
+    # sequence- and callable-backed streams are re-iterable
+    seq = TS(tuple(TS(gen()).blocks()))
+    assert cost_many([a16], seq)[0] == first == cost_many([a16], seq)[0]
+    assert seq.n_ops == 6 and seq.materialize().n_ops == 6
+    fn = TS(gen)                        # generator FUNCTION: lazy + re-iter
+    assert cost_many([a16], fn)[0] == first == cost_many([a16], fn)[0]
+    with pytest.raises(TypeError):
+        TS(42)
+
+
+def test_trace_stream_concat_and_kind_filter_parity():
+    """TraceStream parity satellites: concat composes streams/traces like
+    AddressTrace.concat, and of_kind/loads/stores filter per-kind with the
+    same cycle totals as the dense filters."""
+    from repro.core.trace import TraceStream as TS
+    rng = np.random.default_rng(5)
+    t1 = AddressTrace.from_stream(rng.integers(0, 256, 160), "load")
+    t2 = AddressTrace.from_stream(rng.integers(0, 256, 96), "store")
+    s = TS.concat(t1, TS((t2,)), t1)
+    dense = AddressTrace.concat(t1, t2, t1)
+    a16 = arch.get("16B")
+    assert cost_many([a16], s)[0] == cost_many([a16], dense)[0]
+    assert s.materialize().n_instructions == dense.n_instructions == 3
+    assert cost_many([a16], s.loads())[0].load_cycles \
+        == cost_many([a16], dense.loads())[0].load_cycles
+    assert cost_many([a16], s.stores())[0].n_store_ops == dense.stores().n_ops
+
+
+def test_arch_cost_auto_streams_above_threshold():
+    """arch.cost with no block_ops streams large traces automatically
+    (bit-equal to the explicit dense pass)."""
+    from repro.core.cost_engine import STREAM_THRESHOLD
+    rng = np.random.default_rng(9)
+    n = STREAM_THRESHOLD + 17
+    t = AddressTrace(rng.integers(0, 1 << 12, (n, LANES)),
+                     rng.integers(0, 3, n).astype(np.int8),
+                     np.sort(rng.integers(0, 50, n)).astype(np.int32))
+    a16 = arch.get("16B")
+    assert a16.cost(t) == cost_many([a16], t)[0]
+
+
 # ------------------------------------------------ (c) property testing --
+
+@settings(max_examples=20)
+@given(st.integers(1, 600), st.integers(0, 2 ** 20), st.integers(0, 1),
+       st.sampled_from([1, 3, 16, 1000]))
+def test_property_op_chunk_streams_equal_dense(n_req, seed, masked,
+                                               block_ops):
+    """Random one-instruction request streams (ragged tails, masks): the
+    iter_op_chunks stream costs bit-equal to the dense from_ops trace at
+    any block size — the construction-side streaming invariant."""
+    from repro.core.trace import TraceStream, iter_op_chunks
+    rng = np.random.default_rng(seed)
+    req = rng.integers(0, 1 << 10, n_req)
+    mask = (rng.random(n_req) > 0.3) if masked else None
+    dense = AddressTrace.from_ops(req, "store", mask=mask)
+    stream = TraceStream(
+        lambda: iter_op_chunks(req, "store", mask=mask, block_ops=block_ops))
+    archs = [arch.get(n) for n in ("16B", "4B-offset", "4R-2W", "4R-1W-VB")]
+    assert cost_many(archs, stream) == cost_many(archs, dense)
+
 
 @settings(max_examples=25)
 @given(st.integers(1, 40), st.integers(0, 2 ** 20), st.integers(0, 3),
@@ -281,6 +472,10 @@ def test_serving_cost_streams_through_engine():
     assert eng.serving_cost(block_ops=3) == want
     many = eng.serving_cost(archs=PAPER_ARCHITECTURES)
     assert many[PAPER_ARCHITECTURES.index(eng.mem_arch)] == want
+    # the live stream is the shared protocol and re-iterable (footgun fix)
+    s = eng.serving_stream()
+    total = sum(b.n_ops for b in s)
+    assert total > 0 and sum(b.n_ops for b in s) == total
 
 
 def test_physical_rows_table_is_cached():
