@@ -1,0 +1,26 @@
+"""Static-analysis layer: three passes that turn the cost engine from the
+only oracle into one of two independent oracles.
+
+  * ``repro.analysis.contracts`` — streaming Trace-protocol validator
+    (``validate(trace, arch)``, ``cost_many(..., checked=True)``, and the
+    process-wide ``checking()`` switch the test suite turns on).
+  * ``repro.analysis.symbolic``  — symbolic bank-conflict prover: kernels
+    and ISA programs describe their address streams as affine lane
+    families; ``prove(arch, symbolic)`` pushes them through the engine's
+    generic bank formula and derives per-instruction max-conflict bounds
+    (and full ``TraceCost``s) analytically, bit-exactly cross-checkable
+    against ``cost_many``.
+  * ``repro.analysis.lint``      — AST lint over ``src/`` for the pitfalls
+    this codebase has actually hit (dense materialization in library code,
+    one-shot iterators handed to ``TraceStream``, kernels missing
+    ``trace``/``blocks``, registry names that don't round-trip).
+
+``python -m repro.analysis --lint src --prove --check`` runs all three
+(the CI ``lint-and-prove`` step); see docs/ANALYSIS.md.
+"""
+from repro.analysis.contracts import (TraceContractError, ValidationReport,
+                                      checked_blocks, checking, is_checking,
+                                      set_checking, validate)
+
+__all__ = ["validate", "checked_blocks", "ValidationReport",
+           "TraceContractError", "checking", "set_checking", "is_checking"]

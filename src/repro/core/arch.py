@@ -215,7 +215,8 @@ class MemoryArchitecture:
         cyc = int(self.op_cycles(jnp.asarray(addrs), mask, is_write).sum())
         return cyc + self._instruction_overhead(is_write)
 
-    def cost(self, addr_trace, block_ops: int | None = None) -> TraceCost:
+    def cost(self, addr_trace, block_ops: int | None = None,
+             checked: bool | None = None) -> TraceCost:
         """Cost any ``repro.core.trace.Trace`` (a dense ``AddressTrace``, a
         lazy ``TraceStream``, or a raw block iterable) under this
         architecture's timing model.
@@ -229,7 +230,10 @@ class MemoryArchitecture:
         baseline).  ``block_ops`` chunks the trace so million-op streams
         cost in O(block) memory; when omitted, traces bigger than
         ``STREAM_THRESHOLD`` ops stream at ``DEFAULT_BLOCK_OPS``
-        automatically (bit-equal either way).
+        automatically (bit-equal either way).  ``checked=True`` validates
+        the Trace protocol contracts while costing (one shared pass; see
+        ``repro.analysis.contracts``); the default defers to the
+        process-wide ``checking()`` switch.
         """
         from repro.core.cost_engine import (DEFAULT_BLOCK_OPS,
                                             STREAM_THRESHOLD, cost_many)
@@ -237,7 +241,8 @@ class MemoryArchitecture:
             n = getattr(addr_trace, "n_ops", None)
             if n is not None and n > STREAM_THRESHOLD:
                 block_ops = DEFAULT_BLOCK_OPS
-        return cost_many([self], addr_trace, block_ops=block_ops)[0]
+        return cost_many([self], addr_trace, block_ops=block_ops,
+                         checked=checked)[0]
 
     def _cost_loop(self, addr_trace) -> TraceCost:
         """The pre-engine costing path: one ``op_cycles`` batch + one host
@@ -432,6 +437,12 @@ def register(arch: MemoryArchitecture,
 def _parse(name: str) -> MemoryArchitecture | None:
     m = _BANKED_NAME.match(name)
     if m:
+        banks = int(m.group("banks"))
+        if banks <= 0 or banks & (banks - 1):
+            # "3B"/"0B" match the name shape but aren't constructible;
+            # return None so get() raises its uniform KeyError instead of
+            # a bare ValueError escaping from the layout math
+            return None
         mapping = m.group("mapping") or "lsb"
         if mapping == "bcast":          # "16B-bcast" (lsb map + broadcast)
             mapping, bcast = "lsb", True
@@ -444,11 +455,13 @@ def _parse(name: str) -> MemoryArchitecture | None:
             # mint an arch whose name ("16B") doesn't round-trip and whose
             # layout key spuriously differs from the plain point
             return None
-        return BankedMemory(int(m.group("banks")), mapping,
+        return BankedMemory(banks, mapping,
                             shift=int(m.group("shift") or 1),
                             broadcast=bcast)
     m = _MULTIPORT_NAME.match(name)
     if m:
+        if not int(m.group("r")) or not int(m.group("w")):
+            return None                 # "0R-1W" would divide by zero later
         return MultiPortMemory(int(m.group("r")), int(m.group("w")),
                                vb=bool(m.group("vb")))
     return None

@@ -249,7 +249,8 @@ class _InstrCounter:
             self.n_instr[i] += add
 
 
-def cost_many(archs, trace, block_ops: int | None = None) -> list[TraceCost]:
+def cost_many(archs, trace, block_ops: int | None = None,
+              checked: bool | None = None) -> list[TraceCost]:
     """Price every architecture of ``archs`` against one trace in a single
     fused computation (one device sync total, not ``len(archs) × 3``).
 
@@ -259,6 +260,15 @@ def cost_many(archs, trace, block_ops: int | None = None) -> list[TraceCost]:
     callable of ``AddressTrace`` blocks.  ``block_ops`` additionally chunks
     every block to at most that many ops, bounding peak memory; dense,
     chunked, and streamed costing are bit-equal.
+
+    ``checked=True`` validates the Trace protocol contracts (globally
+    non-decreasing instruction ids, legal ``instr_carry`` chains, shapes,
+    non-negative addresses) on every block as it is priced — validation and
+    costing share the stream's single pass, so even one-shot streams can be
+    checked.  Raises ``repro.core.trace.TraceContractError`` on violation.
+    The default (``None``) defers to the process-wide switch
+    ``repro.analysis.contracts.checking()`` — off in production, on under
+    the test suite's autouse fixture.
 
     Returns one ``TraceCost`` per architecture, in input order — exactly
     what ``arch.cost(trace)`` returns for each (``MemoryArchitecture.cost``
@@ -308,7 +318,20 @@ def cost_many(archs, trace, block_ops: int | None = None) -> list[TraceCost]:
         if len(partials) >= _FOLD_EVERY:
             totals = _fold(totals, partials, len(arch_objs))
 
-    for blk in as_trace(trace).blocks(block_ops):
+    src = as_trace(trace)
+    blocks = src.blocks(block_ops)
+    if checked is None or checked:
+        # analysis imports core, never the reverse at module level — the
+        # lazy import here is the one upward hook, and it only fires when
+        # checking is requested (or to consult the process-wide switch).
+        from repro.analysis import contracts as _contracts
+        if checked or _contracts.is_checking():
+            n_words = (src.meta.get("n_words")
+                       if isinstance(getattr(src, "meta", None), dict)
+                       else None)
+            blocks = _contracts.checked_blocks(blocks, n_words=n_words,
+                                               where="cost_many(checked)")
+    for blk in blocks:
         compute_cycles += blk.compute_cycles
         for k, v in blk.op_counts.items():
             op_counts[k] = op_counts.get(k, 0) + v

@@ -76,10 +76,30 @@ import numpy as np
 from repro.core.memsim import LANES
 
 __all__ = ["AddressTrace", "TraceBuilder", "TraceStream", "Trace",
-           "as_trace", "as_ops", "iter_op_chunks",
+           "TraceContractError", "as_trace", "as_ops", "iter_op_chunks",
            "KIND_LOAD", "KIND_STORE", "KIND_TW", "LANES"]
 
 KIND_LOAD, KIND_STORE, KIND_TW = 0, 1, 2
+
+
+class TraceContractError(ValueError):
+    """A trace violated the Trace protocol contract (non-decreasing
+    instruction ids, legal ``instr_carry`` chains, shape/kind/address
+    consistency).  Raised at coercion/iteration time by ``as_trace`` /
+    ``TraceStream.blocks`` for the cheap streaming checks, and by the full
+    validator in ``repro.analysis.contracts``."""
+
+
+def _check_instr_monotonic(t: "AddressTrace", where: str) -> None:
+    """The cheap streaming contract check: a block's instruction ids must be
+    non-decreasing, or every distinct-instruction count downstream (the cost
+    engine's per-kind overhead accounting, ``_with_instr_base``'s dense
+    renumbering) silently goes wrong."""
+    if t.n_ops > 1 and bool(np.any(np.diff(t.instr) < 0)):
+        raise TraceContractError(
+            f"{where}: instruction ids must be non-decreasing within a "
+            f"block (got a decrease; ids start {t.instr[:8].tolist()}...) — "
+            f"renumber the block or build it through TraceBuilder/concat")
 
 _KIND_NAMES = {"load": KIND_LOAD, "store": KIND_STORE, "tw": KIND_TW,
                "D": KIND_LOAD, "S": KIND_STORE, "TW": KIND_TW}
@@ -129,8 +149,17 @@ def as_trace(obj) -> "AddressTrace | TraceStream":
     """Coerce anything trace-like to a ``Trace``: ``AddressTrace`` and
     ``TraceStream`` pass through (as does any object with a ``blocks``
     method); a zero-arg callable or an iterable of ``AddressTrace`` blocks
-    is wrapped as a ``TraceStream`` (independent-source semantics)."""
-    if isinstance(obj, (AddressTrace, TraceStream)):
+    is wrapped as a ``TraceStream`` (independent-source semantics).
+
+    Coercion rejects dense traces whose instruction ids *decrease* (a
+    ``TraceContractError``): such ids silently corrupt every
+    distinct-instruction count downstream, so they fail fast here instead.
+    Stream sources get the same check lazily, block-by-block, as
+    ``TraceStream.blocks`` draws them."""
+    if isinstance(obj, AddressTrace):
+        _check_instr_monotonic(obj, "as_trace")
+        return obj
+    if isinstance(obj, TraceStream):
         return obj
     if callable(getattr(obj, "blocks", None)):
         return obj
@@ -493,6 +522,7 @@ class TraceStream:
                 if src.compute_cycles or src.op_counts:
                     yield src
                 continue
+            _check_instr_monotonic(src, "TraceStream.blocks")
             carry = seen_ids and bool(src.meta.get("instr_carry"))
             base = off - 1 if carry else off
             renum = src._with_instr_base(base)

@@ -42,6 +42,7 @@ class VMResult:
         """The costed address trace, materialized on demand (the VM costs
         the stream; the dense concatenation exists only if you ask)."""
         if self._trace is None and self.trace_stream is not None:
+            # lint: allow-materialize — on-demand dense view, never costed
             self._trace = self.trace_stream.materialize()
         return self._trace
 

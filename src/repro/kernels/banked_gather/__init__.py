@@ -1,4 +1,5 @@
 from repro.kernels.banked_gather.ops import (banked_gather,
+                                             banked_gather_symbolic,
                                              banked_gather_trace,
                                              banked_gather_trace_blocks,
                                              to_banked_layout,
@@ -30,6 +31,7 @@ register(Kernel(
     ref=lambda arch, table, idx, **_: banked_gather_ref(table, idx),
     trace=banked_gather_trace,
     blocks=banked_gather_trace_blocks,
+    symbolic=banked_gather_symbolic,
     description="bank-major row gather (embedding / paged KV read path)",
 ))
 

@@ -1,4 +1,5 @@
 from repro.kernels.banked_scatter.ops import (banked_scatter,
+                                              banked_scatter_symbolic,
                                               banked_scatter_trace,
                                               banked_scatter_trace_blocks)
 from repro.kernels.banked_scatter.ref import banked_scatter_ref
@@ -30,6 +31,7 @@ register(Kernel(
         table, idx, updates),
     trace=banked_scatter_trace,
     blocks=banked_scatter_trace_blocks,
+    symbolic=banked_scatter_symbolic,
     description="bank-major row scatter (paged KV write path)",
 ))
 

@@ -1,4 +1,5 @@
 from repro.kernels.banked_transpose.ops import (banked_transpose,
+                                                banked_transpose_symbolic,
                                                 banked_transpose_trace,
                                                 banked_transpose_trace_blocks)
 from repro.kernels.banked_transpose.ref import banked_transpose_ref
@@ -10,6 +11,7 @@ register(Kernel(
     ref=lambda arch, x, **_: banked_transpose_ref(x),
     trace=banked_transpose_trace,
     blocks=banked_transpose_trace_blocks,
+    symbolic=banked_transpose_symbolic,
     description="VMEM-tiled matrix transpose (paper Table II workload)",
 ))
 

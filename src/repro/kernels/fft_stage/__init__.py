@@ -1,5 +1,6 @@
 from repro.kernels.fft_stage.ops import (fft4096_radix4, fft_stage_radix4,
-                                         fft_trace, fft_trace_blocks)
+                                         fft_symbolic, fft_trace,
+                                         fft_trace_blocks)
 from repro.kernels.fft_stage.ref import fft_oracle_digit_reversed
 from repro.kernels.registry import Kernel, register
 
@@ -18,6 +19,7 @@ register(Kernel(
     ref=_ref,
     trace=fft_trace,
     blocks=fft_trace_blocks,
+    symbolic=fft_symbolic,
     description="radix-4 DIF FFT stages (paper Table III workload)",
 ))
 

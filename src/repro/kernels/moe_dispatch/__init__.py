@@ -1,4 +1,5 @@
 from repro.kernels.moe_dispatch.ops import (moe_dispatch_positions,
+                                            moe_dispatch_symbolic,
                                             moe_dispatch_trace,
                                             moe_dispatch_trace_blocks)
 from repro.kernels.moe_dispatch.ref import moe_dispatch_ref
@@ -12,6 +13,7 @@ register(Kernel(
         moe_dispatch_ref(experts, n_experts, capacity),
     trace=moe_dispatch_trace,
     blocks=moe_dispatch_trace_blocks,
+    symbolic=moe_dispatch_symbolic,
     description="running-count MoE token dispatch (arbiter math at scale)",
 ))
 

@@ -54,6 +54,9 @@ class Kernel:
     #: (arch, *args, block_ops=…) -> iterator of TraceStream source blocks
     blocks: Callable | None = None
     cost: Callable | None = None     # legacy opaque override; prefer trace
+    #: (arch, *args) -> repro.analysis.symbolic.SymbolicTrace — the kernel's
+    #: address stream as closed-form lane families for the conflict prover
+    symbolic: Callable | None = None
     description: str = ""
 
     def run(self, arch, *args, **kwargs):
@@ -93,6 +96,18 @@ class Kernel:
         t = self.address_trace(a, *args, **kwargs)   # dense-chunking shim
         return TraceStream(functools.partial(t.blocks, block_ops), meta=meta)
 
+    def symbolic_trace(self, arch, *args, **kwargs):
+        """The kernel's address stream as a ``SymbolicTrace`` (closed-form
+        lane families; see repro.analysis.symbolic) — the input of the
+        conflict prover.  ``analysis.symbolic.prove(arch, ...)`` derives
+        per-instruction max-conflict bounds and a full ``TraceCost`` from
+        it analytically, bit-exactly cross-checkable against
+        ``arch.cost(self.address_trace(...))``."""
+        if self.symbolic is None:
+            raise NotImplementedError(
+                f"kernel {self.name!r} has no symbolic trace description")
+        return self.symbolic(_arch.resolve(arch), *args, **kwargs)
+
     def cost_cycles(self, arch, *args, **kwargs):
         """Cycles this operation costs under ``arch``'s timing model
         (= ``arch.cost(self.trace(arch, *args)).total_cycles``)."""
@@ -125,12 +140,13 @@ def register_kernel(name: str, *, ref: Callable,
                     trace: Callable | None = None,
                     blocks: Callable | None = None,
                     cost: Callable | None = None,
+                    symbolic: Callable | None = None,
                     description: str = "") -> Callable:
     """Decorator form: registers the decorated function as the Pallas entry
     point of a new Kernel and returns the Kernel."""
     def deco(pallas: Callable) -> Kernel:
         return register(Kernel(name=name, pallas=pallas, ref=ref, trace=trace,
-                               blocks=blocks, cost=cost,
+                               blocks=blocks, cost=cost, symbolic=symbolic,
                                description=description))
     return deco
 

@@ -432,4 +432,4 @@ def simulate_serving_trace(arch, batch: int, prompt_len: int,
     return simulate_serving_stream(
         arch, batch, prompt_len, decode_steps, page_len=page_len,
         n_kv_layers=n_kv_layers, max_seq=max_seq,
-        include_prefill=include_prefill).materialize()
+        include_prefill=include_prefill).materialize()  # lint: allow-materialize

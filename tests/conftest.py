@@ -15,3 +15,16 @@ except ModuleNotFoundError:
     sys.path.insert(0, os.path.dirname(__file__))
     import _hypothesis_stub
     _hypothesis_stub.install()
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _trace_contracts_checked():
+    """Every test runs with the trace-contract checker armed: any
+    ``cost_many``/``arch.cost`` call validates the block stream it consumes
+    (monotonic instruction ids, carry chains, shapes, address bounds) for
+    free — a malformed trace fails loudly instead of mis-costing."""
+    from repro.analysis.contracts import checking
+    with checking():
+        yield

@@ -1,0 +1,258 @@
+"""Trace-contract checker: the streaming validator catches every protocol
+violation the cost engine would silently mis-price, passes every legitimate
+stream in the repo, and the satellite fixes hold (as_trace coercion-time id
+check; arch-registry name round-trip).  ISSUE 6 tentpole pass 1 +
+satellites 1-3."""
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import (TraceContractError, ValidationReport,
+                                      checked_blocks, checking, is_checking,
+                                      validate)
+from repro.core import arch as A
+from repro.core.cost_engine import cost_many
+from repro.core.trace import (AddressTrace, TraceStream, as_trace,
+                              iter_op_chunks)
+
+ARCH = A.get("16B")
+
+
+def _ops_trace(n_ops, kind="load", base=0, instr=None, mask=None):
+    addrs = (np.arange(n_ops * 16) % 251).reshape(n_ops, 16) + base
+    t = AddressTrace.from_ops(addrs, kind=kind, mask=mask)
+    t.instr[:] = np.arange(n_ops) if instr is None else np.asarray(instr)
+    return t
+
+
+class _RawBlocks:
+    """A custom Trace whose ``blocks`` replays pre-built blocks verbatim —
+    the only way to hand the validator a PROTOCOL-level violation, since
+    ``TraceStream`` renumbers source-local ids into legality."""
+
+    def __init__(self, blocks, meta=None):
+        self._blocks = blocks
+        self.meta = meta or {}
+
+    def blocks(self, block_ops=None):
+        yield from self._blocks
+
+
+# --------------------------------------------------------------------------
+# The validator passes everything legitimate
+# --------------------------------------------------------------------------
+
+def test_validate_dense_and_stream_and_report():
+    t = _ops_trace(40)
+    rep = validate(t, ARCH)
+    assert isinstance(rep, ValidationReport) and rep.ok
+    assert rep.n_ops == 40 and rep.n_instructions == 40
+    assert rep.n_ops_by_kind["load"] == 40
+
+    stream = TraceStream([_ops_trace(8), _ops_trace(8, kind="store")])
+    rep = validate(stream, ARCH, block_ops=4)
+    assert rep.ok and rep.n_blocks == 4 and rep.n_ops == 16
+    assert rep.n_ops_by_kind == {"load": 8, "store": 8}
+
+
+def test_validate_every_registered_kernel_stream():
+    """The acceptance gate in miniature: every kernel's trace_blocks stream
+    satisfies the contract (the CLI ``--check`` runs the same sweep)."""
+    from repro.kernels import registry as kreg
+    rng = np.random.default_rng(0)
+    table = rng.standard_normal((128, 16)).astype(np.float32)
+    idx = rng.integers(0, 128, size=48).astype(np.int32)
+    args = {
+        "banked_gather": (table, idx),
+        "banked_scatter": (table, idx),
+        "banked_transpose": (np.zeros((16, 16), np.float32),),
+        "carry_arbiter": (rng.integers(0, 1 << 16, (24, 16))
+                          .astype(np.uint32),),
+        "conflict_popcount": (rng.integers(0, 16, (24, 16))
+                              .astype(np.int32),),
+        "fft_stage": (np.zeros((1, 64), np.complex64),),
+        "moe_dispatch": (rng.integers(0, 4, 64).astype(np.int32), 4, 32),
+    }
+    for name in kreg.names():
+        k = kreg.get(name)
+        stream = TraceStream(
+            lambda k=k, a=args[name]: k.trace_blocks(ARCH, *a, block_ops=16))
+        assert validate(stream, ARCH).ok, name
+
+
+def test_validate_isa_and_serving_streams():
+    from repro.isa.programs.transpose import transpose_program
+    from repro.isa.vm import program_trace_stream
+    from repro.serving.kvcache import simulate_serving_stream
+    assert validate(program_trace_stream(transpose_program(16)), ARCH).ok
+    stream = simulate_serving_stream(ARCH, batch=2, prompt_len=9,
+                                     decode_steps=4, page_len=8)
+    assert validate(stream, ARCH).ok
+
+
+# --------------------------------------------------------------------------
+# Satellite 3: edge cases — empty, all-false masks, block_ops=1, long carry
+# --------------------------------------------------------------------------
+
+def test_validate_empty_trace():
+    rep = validate(AddressTrace.empty(), ARCH)
+    assert rep.ok and rep.n_ops == 0 and rep.n_blocks in (0, 1)
+    assert validate(TraceStream([]), ARCH).ok
+
+
+def test_validate_all_false_mask():
+    t = _ops_trace(6, mask=np.zeros((6, 16), bool))
+    rep = validate(t, ARCH)
+    assert rep.ok and rep.n_inactive_lanes == 6 * 16
+    # masked lanes may carry junk addresses — only ACTIVE lanes are checked
+    t2 = AddressTrace.from_ops(np.full((3, 16), -7),
+                               kind="load", mask=np.zeros((3, 16), bool))
+    assert validate(t2, ARCH).ok
+
+
+def test_validate_block_ops_one():
+    t = _ops_trace(17)
+    rep = validate(t, ARCH, block_ops=1)
+    assert rep.ok and rep.n_blocks == 17 and rep.n_instructions == 17
+
+
+def test_validate_carry_chain_three_plus_blocks():
+    """One logical instruction split over >= 3 blocks via instr_carry is one
+    instruction to both the validator and the engine."""
+    addrs = np.arange(10 * 16).reshape(10, 16)
+    stream = TraceStream(lambda: iter_op_chunks(addrs, kind="load",
+                                                block_ops=3))
+    rep = validate(stream, ARCH)
+    assert rep.ok and rep.n_blocks >= 4 and rep.n_instructions == 1
+    cost = cost_many([ARCH], stream, checked=True)[0]
+    assert cost.n_load_ops == 10
+
+
+# --------------------------------------------------------------------------
+# The validator CATCHES protocol violations
+# --------------------------------------------------------------------------
+
+def test_decreasing_ids_across_blocks_rejected():
+    b1 = _ops_trace(4, instr=[10, 11, 12, 13])
+    b2 = _ops_trace(4, instr=[5, 6, 7, 8])   # protocol-level regression
+    with pytest.raises(TraceContractError, match="decrease"):
+        validate(_RawBlocks([b1, b2]), ARCH)
+
+
+def test_decreasing_ids_within_block_rejected():
+    b = _ops_trace(4, instr=[3, 2, 1, 0])
+    with pytest.raises(TraceContractError):
+        list(checked_blocks(iter([b])))
+
+
+def test_bad_carry_flag_rejected():
+    b1, b2 = _ops_trace(4), _ops_trace(4)
+    b2.instr[:] = b1.instr.max() + 5         # gap, yet claims continuation
+    b2.meta["instr_carry"] = True
+    with pytest.raises(TraceContractError, match="carry"):
+        validate(_RawBlocks([b1, b2]), ARCH)
+
+
+def test_carry_on_first_block_rejected():
+    b = _ops_trace(4)
+    b.meta["instr_carry"] = True
+    with pytest.raises(TraceContractError, match="carry"):
+        validate(_RawBlocks([b]), ARCH)
+
+
+def test_carried_source_kind_change_rejected():
+    """A generator-authored carry claims 'the same instruction continues';
+    flipping kind across that carry is a generator bug (caught at SOURCE
+    level — protocol-level carries from the dense auto-chunker may span
+    kinds, see test_uncarried_kind_sharing_is_legal)."""
+    b1 = _ops_trace(4)
+    b2 = _ops_trace(4, kind="store")
+    b2.meta["instr_carry"] = True
+    with pytest.raises(TraceContractError, match="kind"):
+        validate(TraceStream([b1, b2]), ARCH)
+
+
+def test_uncarried_kind_sharing_is_legal():
+    """Without an explicit carry, one id spanning kinds is fine — the
+    engine keys per-kind overhead on (kind, id), so nothing double-charges
+    (this is exactly what the cost-engine fuzz traces generate)."""
+    b1 = _ops_trace(4)
+    b2 = _ops_trace(4, kind="store")
+    b2.instr[:] = b1.instr.max()
+    rep = validate(_RawBlocks([b1, b2]), ARCH)
+    assert rep.ok and rep.n_instr_by_kind == {"load": 4, "store": 1}
+
+
+def test_negative_active_address_rejected():
+    t = AddressTrace.from_ops(np.full((2, 16), -3), kind="load")
+    with pytest.raises(TraceContractError, match="negative"):
+        validate(t, ARCH)
+
+
+def test_address_bounds_vs_memspec():
+    t = _ops_trace(4, base=10**9)
+    with pytest.raises(TraceContractError, match="out of bounds"):
+        validate(t, ARCH, n_words=1 << 20)
+    assert validate(t).ok           # no bound known -> only sign-checked
+
+
+def test_strict_false_collects_instead_of_raising():
+    b1, b2 = _ops_trace(4), _ops_trace(4)
+    b2.instr[:] = b1.instr[:] - 1
+    rep = validate(_RawBlocks([b1, b2]), ARCH, strict=False)
+    assert not rep.ok and rep.violations
+
+
+# --------------------------------------------------------------------------
+# checked=True wiring through cost_many / arch.cost, and the global switch
+# --------------------------------------------------------------------------
+
+def test_checked_costing_bit_equal():
+    t = _ops_trace(64)
+    assert cost_many([ARCH], t, checked=True) == cost_many([ARCH], t,
+                                                           checked=False)
+    assert ARCH.cost(t, checked=True) == ARCH.cost(t)
+
+
+def test_checked_costing_raises_on_bad_stream():
+    b1, b2 = _ops_trace(4), _ops_trace(4)
+    b2.instr[:] = b1.instr[:] - 1
+    bad = _RawBlocks([b1, b2])
+    with pytest.raises(TraceContractError):
+        cost_many([ARCH], bad, checked=True)
+    with pytest.raises(TraceContractError):   # autouse fixture arms checking
+        cost_many([ARCH], bad)
+    assert is_checking()
+    with checking(False):
+        assert not is_checking()
+        cost_many([ARCH], bad, checked=False)  # explicit off: engine trusts
+
+
+# --------------------------------------------------------------------------
+# Satellite 1: as_trace rejects decreasing ids at coercion time
+# --------------------------------------------------------------------------
+
+def test_as_trace_rejects_decreasing_ids():
+    t = _ops_trace(4, instr=[1, 0, 0, 0])
+    with pytest.raises(TraceContractError):
+        as_trace(t)
+
+
+# --------------------------------------------------------------------------
+# Satellite 2: registry names round-trip through the arch-name parser
+# --------------------------------------------------------------------------
+
+def test_registry_names_round_trip():
+    from repro.tune.search import EXTENDED_SPACE, PAPER_SPACE
+    names = set(A.names()) | set(PAPER_SPACE.names())
+    names |= set(EXTENDED_SPACE.names())
+    assert any("-s" in n for n in names)      # shifted points are exercised
+    for name in sorted(names):
+        arch = A.get(name)                    # parses (registered or not)
+        assert arch.name == name
+        assert A.get(name).spec == arch.spec
+
+
+def test_unparseable_names_raise_keyerror():
+    for bad in ("3B", "0B", "B16", "16B-", "0R-1W", "nonsense"):
+        with pytest.raises(KeyError):
+            A.get(bad)

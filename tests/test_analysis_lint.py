@@ -1,0 +1,97 @@
+"""Repo lint pass: each rule fires on a synthetic positive, honors its
+waiver, and — the real gate — reports ZERO findings on the shipped ``src/``
+tree and registries (what CI's ``python -m repro.analysis --lint src``
+enforces)."""
+from pathlib import Path
+
+from repro.analysis.lint import (Finding, lint_file, lint_paths,
+                                 registry_findings, run_all)
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+
+def _codes(findings):
+    return [f.code for f in findings]
+
+
+# --------------------------------------------------------------------------
+# REPRO001: dense materialize in library code
+# --------------------------------------------------------------------------
+
+def test_materialize_flagged_and_waived():
+    src = (
+        "t1 = stream.materialize()\n"
+        "t2 = stream.materialize()  # lint: allow-materialize\n"
+        "# lint: allow-materialize — deliberate dense view\n"
+        "t3 = stream.materialize()\n"
+    )
+    fs = lint_file("x.py", source=src)
+    assert _codes(fs) == ["REPRO001"] and fs[0].line == 1
+    assert "STREAM_THRESHOLD" in fs[0].message
+
+
+def test_materialize_waiver_covers_multiline_call():
+    src = (
+        "t = simulate(\n"
+        "    arch, batch,\n"
+        "    steps).materialize()  # lint: allow-materialize\n"
+    )
+    assert lint_file("x.py", source=src) == []
+
+
+# --------------------------------------------------------------------------
+# REPRO002: one-shot iterator handed to TraceStream
+# --------------------------------------------------------------------------
+
+def test_one_shot_generator_call_flagged():
+    src = (
+        "def gen():\n"
+        "    yield 1\n"
+        "s = TraceStream(gen())\n"
+    )
+    fs = lint_file("x.py", source=src)
+    assert _codes(fs) == ["REPRO002"] and fs[0].line == 3
+
+
+def test_iter_call_flagged():
+    fs = lint_file("x.py", source="s = TraceStream(iter(blocks))\n")
+    assert _codes(fs) == ["REPRO002"]
+
+
+def test_legal_tracestream_constructions_not_flagged():
+    """The repo's real idioms must stay clean: passing the generator
+    FUNCTION, a lambda, a list, or a list-returning method call."""
+    src = (
+        "def gen():\n"
+        "    yield 1\n"
+        "def helper():\n"
+        "    return [1]\n"
+        "s1 = TraceStream(gen)\n"                      # function, re-iterable
+        "s2 = TraceStream(lambda: gen())\n"            # fresh per pass
+        "s3 = TraceStream([a, b])\n"                   # list
+        "s4 = TraceStream(self._chunks(True))\n"       # list-returning method
+        "s5 = TraceStream(helper())\n"                 # non-generator call
+    )
+    assert lint_file("x.py", source=src) == []
+
+
+# --------------------------------------------------------------------------
+# The shipped tree and registries are clean (the CI gate)
+# --------------------------------------------------------------------------
+
+def test_src_tree_is_lint_clean():
+    assert lint_paths([str(SRC)]) == []
+
+
+def test_registries_are_clean():
+    assert registry_findings() == []
+
+
+def test_run_all_clean_on_repo():
+    assert run_all((str(SRC),)) == []
+
+
+def test_finding_str_is_clickable():
+    f = Finding("REPRO001", "src/x.py", 7, "msg")
+    assert str(f).startswith("src/x.py:7: REPRO001")
+    assert str(Finding("REPRO004", "arch:16B", 0, "m")) == "arch:16B: REPRO004 m"
