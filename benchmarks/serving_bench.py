@@ -2,28 +2,80 @@
 paper memory (the KV cache is the paper's "dataset sizes grow past what
 multi-port replication can afford" regime — docs/SERVING.md).
 
-Each workload is a (batch, context) point of ``bench.serving_workload``:
-the page allocator runs per architecture (its preferred bank follows the
-arch's bank map), the prefill page writes + every decode step lower to one
-``AddressTrace``, and ``arch.cost`` prices it like any Table II/III cell.
+Two sections:
 
-CSV: name,us_per_call,derived (cycles | read/write bank efficiency).
-``--smoke`` runs the smallest point only (CI gate).
+  * ``serving_*`` rows — fixed-batch (batch, context) points of
+    ``bench.serving_workload``: the page allocator runs per architecture
+    (its preferred bank follows the arch's bank map), the prefill page
+    writes + every decode step lower to one ``AddressTrace``, and
+    ``arch.cost`` prices it like any Table II/III cell.
+  * ``sched_*`` rows — continuous-batching serving days of
+    ``bench.scheduler_workload``: an arrival-rate × context-distribution
+    grid scheduled lane-ragged by ``repro.serving.scheduler``, priced
+    per-token through the streaming ``Trace`` protocol.  The per-cell
+    raw-time winner is reported against the fixed-batch serving winner —
+    the arch-ranking flip multi-tenant load causes (ISSUE 7).
+
+CSV: name,us_per_call,derived (cycles | bank efficiency | us_per_token).
+``--smoke`` runs the smallest points only (CI gate).  ``--check``
+additionally gates (exit non-zero on failure):
+
+  * a pinned small scheduler run: the live ``ServeEngine.run_scheduler``
+    trace is bit-equal to the simulated lowering (same op count, same
+    pinned 16B / 4R-2W cycles);
+  * a ≥1000-sequence simulated serving day priced end-to-end through the
+    stream with host peak memory (tracemalloc) bounded well under the
+    dense (ops × 16) matrix it never materializes;
+  * the scheduler grid reports at least one arch-ranking flip vs. the
+    fixed-batch winner (pinned: low-arrival days flip to 4R-1W).
+
+Scheduler results are appended to ``BENCH_cost.json`` under the
+``"scheduler"`` key (the cost-engine rows written by cost_bench.py are
+left untouched).
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
+import time
+import tracemalloc
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from repro.bench import serving_workload, sweep
+from repro.bench import scheduler_workload, serving_workload, sweep
 from repro.core.arch import PAPER_ARCHITECTURES
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(ROOT, "BENCH_cost.json")
 
 #: (batch, prompt_len, decode_steps) grid — small / medium / large context
 POINTS = ((4, 32, 32), (8, 64, 64), (16, 128, 128))
 PAGE_LEN = 8
 N_KV_LAYERS = 2
+
+#: (arrival_rate, context_dist) grid for the continuous-batching section —
+#: low/high load × short/long/mixed tenancy (one seeded day per cell)
+SCHED_POINTS = ((0.5, "short"), (0.5, "long"), (1.0, "mixed"),
+                (4.0, "short"), (4.0, "long"))
+SCHED_N_REQUESTS = 64
+SCHED_LANES = 8
+SCHED_MAX_SEQ = 128
+
+#: the fixed-batch serving point whose winner tune pins (PR 3's
+#: test_tune_search_over_serving_workload): 4R-2W on raw time
+FIXED_POINT = dict(batch=4, prompt_len=16, decode_steps=8, page_len=4,
+                   n_kv_layers=2)
+
+#: --check pins for the live-vs-simulated gate (llama3.2-1b smoke config,
+#: 4 lanes, max_seq 32, page_len 8, seq-skew policy)
+CHECK_TRAFFIC = ((0, 12, 8), (0, 5, 6), (1, 8, 4), (2, 3, 0), (2, 9, 5),
+                 (3, 12, 3))          # (arrival, prompt_len, max_new)
+CHECK_N_OPS = 80
+CHECK_CYCLES = {"16B": 2800, "4R-2W": 128}
+#: --check pins for the streamed serving-day gate
+DAY_REQUESTS = 1000
+DAY_PEAK_HEADROOM = 2.0   # dense matrix must be ≥ 2x the streamed peak
 
 
 def workloads(smoke: bool = False):
@@ -31,6 +83,15 @@ def workloads(smoke: bool = False):
     return [serving_workload(batch=b, prompt_len=p, decode_steps=d,
                              page_len=PAGE_LEN, n_kv_layers=N_KV_LAYERS)
             for b, p, d in pts]
+
+
+def sched_workloads(smoke: bool = False):
+    pts = SCHED_POINTS[:2] if smoke else SCHED_POINTS
+    return [scheduler_workload(n_requests=SCHED_N_REQUESTS, arrival_rate=r,
+                               context_dist=d, n_lanes=SCHED_LANES,
+                               max_seq=SCHED_MAX_SEQ, page_len=PAGE_LEN,
+                               n_kv_layers=N_KV_LAYERS, seed=0)
+            for r, d in pts]
 
 
 def rows(smoke: bool = False):
@@ -48,12 +109,183 @@ def rows(smoke: bool = False):
     return out
 
 
+def sched_rows(smoke: bool = False):
+    out = []
+    for rec in sweep(PAPER_ARCHITECTURES, sched_workloads(smoke)):
+        out.append({
+            "name": f"{rec['workload']}_{rec['arch']}",
+            "workload": rec["workload"], "arch": rec["arch"],
+            "us_per_call": round(rec["time_us"], 2),
+            "us_per_token": round(rec["time_us"] / rec["n_tokens"], 4),
+            "total_cycles": rec["total_cycles"],
+            "load_cycles": rec["load_cycles"],
+            "store_cycles": rec["store_cycles"],
+            "w_bank_eff": rec["w_bank_eff"],
+        })
+    return out
+
+
+def ranking_flip_report(sched: list) -> dict:
+    """Per-day raw-time winners vs. the pinned fixed-batch serving winner
+    (the ISSUE 7 acceptance question: does multi-tenant load change which
+    memory wins?)."""
+    from repro import tune
+    fixed = tune.search(workload=serving_workload(**FIXED_POINT))
+    fixed_winner = fixed[0].arch
+    winners = {}
+    for r in sched:
+        w = winners.get(r["workload"])
+        if w is None or r["us_per_token"] < w[1]:
+            winners[r["workload"]] = (r["arch"], r["us_per_token"])
+    report = {
+        "fixed_batch_winner": fixed_winner,
+        "day_winners": {k: {"arch": a, "us_per_token": u}
+                        for k, (a, u) in winners.items()},
+        "flips": sorted(k for k, (a, _) in winners.items()
+                        if a != fixed_winner),
+    }
+    report["has_flip"] = bool(report["flips"])
+    return report
+
+
+# -- --check gates -----------------------------------------------------------
+
+def check_live_equals_sim() -> dict:
+    """Pin a small live ``run_scheduler`` against the simulated lowering:
+    identical trace bytes, pinned op count and cycles."""
+    import jax
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.configs.base import RunConfig
+    from repro.core import arch as A
+    from repro.launch.sharding import NO_AXES
+    from repro.models import init_tree, model_specs
+    from repro.serving.engine import ServeEngine
+    from repro.serving.scheduler import Request, simulate_scheduler_stream
+    cfg = get_smoke_config("llama3.2-1b")
+    params = init_tree(model_specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, RunConfig(remat="none", attn_impl="dense"),
+                      params, NO_AXES, max_batch=4, max_seq=32,
+                      kv_mode="paged", page_len=8)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, arrival=a, prompt_len=p, max_new_tokens=m,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        p).astype(np.int32))
+            for i, (a, p, m) in enumerate(CHECK_TRAFFIC)]
+    eng.run_scheduler(reqs, policy="seq-skew")
+    live = eng.scheduler_stream().materialize()
+    sim = simulate_scheduler_stream(
+        eng.mem_arch, reqs, n_lanes=4, max_seq=32, page_len=8,
+        n_kv_layers=eng.n_kv_layers, policy="seq-skew").materialize()
+    bit_equal = (np.array_equal(live.addrs, sim.addrs)
+                 and np.array_equal(live.kinds, sim.kinds)
+                 and np.array_equal(live.instr, sim.instr)
+                 and np.array_equal(np.asarray(live.mask),
+                                    np.asarray(sim.mask)))
+    cycles = {n: A.get(n).cost(live).total_cycles for n in CHECK_CYCLES}
+    return {"workload": "check_live_vs_sim", "n_ops": int(live.n_ops),
+            "bit_equal": bool(bit_equal),
+            "cycles": cycles,
+            "ok": bool(bit_equal and live.n_ops == CHECK_N_OPS
+                       and cycles == CHECK_CYCLES)}
+
+
+def check_streamed_day() -> dict:
+    """Price a ≥1000-sequence serving day through the stream and bound the
+    host peak against the dense matrix it must never materialize."""
+    from repro.core import arch as _arch
+    from repro.core.cost_engine import cost_many
+    wl = scheduler_workload(n_requests=DAY_REQUESTS, arrival_rate=2.0,
+                            context_dist="long", n_lanes=16, max_seq=256,
+                            page_len=PAGE_LEN, n_kv_layers=N_KV_LAYERS,
+                            seed=0)
+    archs = [_arch.resolve(a.name) for a in PAPER_ARCHITECTURES]
+    stream = wl.stream_fn(archs[0])
+    n_ops = sum(b.n_ops for b in stream.blocks(block_ops=4096))
+    t0 = time.perf_counter()
+    costs = cost_many(archs, stream, block_ops=4096)   # warm (jit compiles)
+    price_s = time.perf_counter() - t0
+    tracemalloc.start()
+    try:
+        cost_many(archs, stream, block_ops=4096)
+        peak = tracemalloc.get_traced_memory()[1]
+    finally:
+        tracemalloc.stop()
+    dense = n_ops * 16 * 4
+    return {"workload": "check_streamed_day", "n_requests": DAY_REQUESTS,
+            "n_tokens": wl.meta["n_tokens"], "n_ops": int(n_ops),
+            "price_s": round(price_s, 2),
+            "stream_peak_bytes": int(peak),
+            "dense_matrix_bytes": int(dense),
+            "total_cycles_16B": costs[[a.name for a in archs].index(
+                "16B")].total_cycles,
+            "ok": bool(dense >= DAY_PEAK_HEADROOM * peak)}
+
+
+def check(sched: list, flips: dict) -> tuple[list, list]:
+    """CI gate (--smoke --check): returns (check_rows, failure messages)."""
+    failures = []
+    live = check_live_equals_sim()
+    if not live["ok"]:
+        failures.append(
+            f"live run_scheduler trace != simulated lowering (bit_equal="
+            f"{live['bit_equal']}, n_ops={live['n_ops']} want {CHECK_N_OPS},"
+            f" cycles={live['cycles']} want {CHECK_CYCLES})")
+    day = check_streamed_day()
+    if not day["ok"]:
+        failures.append(
+            f"streamed {DAY_REQUESTS}-request day peaked at "
+            f"{day['stream_peak_bytes']} B; need ≤ dense matrix "
+            f"{day['dense_matrix_bytes']} B / {DAY_PEAK_HEADROOM}")
+    if not flips["has_flip"]:
+        failures.append(
+            f"no arch-ranking flip vs fixed-batch winner "
+            f"{flips['fixed_batch_winner']} across {len(flips['day_winners'])}"
+            f" scheduler days — the pinned low-arrival 4R-1W flip is gone")
+    return [live, day], failures
+
+
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
-    for r in rows(smoke="--smoke" in argv):
+    smoke = "--smoke" in argv
+    out = rows(smoke=smoke)
+    sched = sched_rows(smoke=smoke)
+    for r in out + sched:
         extra = "|".join(f"{k}={v}" for k, v in r.items()
-                         if k not in ("name", "us_per_call"))
+                         if k not in ("name", "us_per_call", "workload",
+                                      "arch"))
         print(f"{r['name']},{r['us_per_call']},{extra}")
+    flips = ranking_flip_report(sched)
+    print(f"# fixed-batch winner {flips['fixed_batch_winner']}; day winners "
+          + "; ".join(f"{k}->{v['arch']}"
+                      for k, v in sorted(flips["day_winners"].items()))
+          + (f"; flips: {', '.join(flips['flips'])}" if flips["has_flip"]
+             else "; no flip"))
+    check_rows, failures = ([], [])
+    if "--check" in argv:
+        check_rows, failures = check(sched, flips)
+    payload = {}
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            payload = json.load(f)
+    payload["scheduler"] = {
+        "smoke": smoke,
+        "grid": {"points": [list(p) for p in SCHED_POINTS],
+                 "n_requests": SCHED_N_REQUESTS, "n_lanes": SCHED_LANES,
+                 "max_seq": SCHED_MAX_SEQ},
+        "rows": sched, "ranking": flips, "checks": check_rows,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# appended scheduler section to {OUT_JSON}")
+    if "--check" in argv:
+        if failures:
+            for msg in failures:
+                print(f"# CHECK FAILED: {msg}", file=sys.stderr)
+            raise SystemExit(1)
+        print("# check OK: live==sim pinned, streamed day bounded, "
+              "ranking flip present")
 
 
 if __name__ == "__main__":

@@ -96,3 +96,55 @@ def serving_workload(batch: int = 4, prompt_len: int = 32,
               "n_kv_layers": n_kv_layers},
         lowering_key=lowering_key,
         stream_fn=stream_fn)
+
+
+def scheduler_workload(n_requests: int = 64, arrival_rate: float = 1.0,
+                       context_dist: str = "mixed", n_lanes: int = 16,
+                       max_seq: int = 256, page_len: int = 8,
+                       n_kv_layers: int = 2, policy: str = "seq-skew",
+                       seed: int = 0, name: str | None = None
+                       ) -> TraceWorkload:
+    """Continuous-batching serving traffic (one seeded serving day:
+    ``n_requests`` jobs at ``arrival_rate`` with ``context_dist`` context
+    lengths, scheduled lane-ragged by ``repro.serving.scheduler``) as a
+    sweep/tune workload.
+
+    Like ``serving_workload`` the lowering is per-banked-layout (the
+    scheduler's page pool places pages under the arch's bank map, skewed
+    by ``policy``), cached per ``lowering_key`` and priced in O(block)
+    memory through the streaming ``Trace`` protocol — a thousand-sequence
+    day never materializes.  ``meta["n_tokens"]`` (the day's generated
+    tokens) feeds the ``us_per_token`` tune objective.
+    """
+    from repro.serving.scheduler import (simulate_scheduler_stream,
+                                         synthesize_requests,
+                                         total_new_tokens)
+    reqs = synthesize_requests(n_requests, arrival_rate=arrival_rate,
+                               context_dist=context_dist, max_seq=max_seq,
+                               seed=seed)
+    kw = dict(n_lanes=n_lanes, max_seq=max_seq, page_len=page_len,
+              n_kv_layers=n_kv_layers, policy=policy)
+
+    def stream_fn(arch):
+        return simulate_scheduler_stream(arch, reqs, **kw)
+
+    def trace_fn(arch):
+        # per-cell introspection only; sweeps price the stream
+        return stream_fn(arch).materialize()    # lint: allow-materialize
+
+    def lowering_key(arch):
+        lay = arch.layout
+        return ("dense-canonical" if lay is None
+                else (lay.n_banks, lay.mapping, lay.shift))
+
+    return TraceWorkload(
+        name=name or (f"sched_n{n_requests}_r{arrival_rate:g}"
+                      f"_{context_dist}_{policy}"),
+        trace_fn=trace_fn,
+        meta={"n_requests": n_requests, "arrival_rate": arrival_rate,
+              "context_dist": context_dist, "n_lanes": n_lanes,
+              "max_seq": max_seq, "page_len": page_len,
+              "n_kv_layers": n_kv_layers, "policy": policy, "seed": seed,
+              "n_tokens": total_new_tokens(reqs)},
+        lowering_key=lowering_key,
+        stream_fn=stream_fn)

@@ -10,26 +10,42 @@ request stream is recorded as a first-class
 kernels.  ``bench.serving_workload`` wraps the same traffic as a sweep/tune
 workload (``kvcache.simulate_serving_trace`` — no model required).
 
+``repro.serving.scheduler`` adds the continuous-batching control plane:
+multi-tenant request queues, mid-flight admission/eviction over a
+free-bitmap ``PagePool`` with a sequence-skewed preferred-bank policy, and
+whole serving *days* lowered to the streaming ``Trace`` protocol
+(``simulate_scheduler_stream``); ``ServeEngine.run_scheduler`` drives the
+same schedule lane-ragged against the real model.
+
 Layout decisions (bank count, page→bank map, map shift) always come from a
 ``repro.core.arch`` architecture via ``PagedKVConfig.from_arch`` — serving
 holds no private layout constants.
 """
-from repro.serving.engine import GenerationResult, ServeEngine
-from repro.serving.kvcache import (PagedKVConfig, PagedKVState,
-                                   PageTableState, allocate_pages,
-                                   append_token, bank_load_stats,
-                                   decode_step_trace, gather_kv,
-                                   gather_pages, init_pages, init_state,
-                                   pool_pages, prefill_trace, scatter_pages,
-                                   simulate_serving_stream,
+from repro.serving.engine import (GenerationResult, SchedulerRunResult,
+                                  ServeEngine)
+from repro.serving.kvcache import (ALLOC_POLICIES, PagedKVConfig,
+                                   PagedKVState, PageTableState,
+                                   allocate_pages, append_token,
+                                   bank_load_stats, decode_step_trace,
+                                   gather_kv, gather_pages, init_pages,
+                                   init_state, pool_pages, prefill_trace,
+                                   preferred_banks, resolve_policy,
+                                   scatter_pages, simulate_serving_stream,
                                    simulate_serving_trace)
+from repro.serving.scheduler import (PagePool, Request, Scheduler,
+                                     scheduler_step_trace,
+                                     simulate_scheduler_stream,
+                                     synthesize_requests)
 
 __all__ = [
-    "ServeEngine", "GenerationResult",
+    "ServeEngine", "GenerationResult", "SchedulerRunResult",
     "PagedKVConfig", "PagedKVState", "PageTableState",
     "pool_pages", "init_pages", "init_state", "allocate_pages",
     "append_token", "gather_kv", "bank_load_stats",
     "gather_pages", "scatter_pages",
     "decode_step_trace", "prefill_trace", "simulate_serving_trace",
     "simulate_serving_stream",
+    "ALLOC_POLICIES", "preferred_banks", "resolve_policy",
+    "Request", "Scheduler", "PagePool", "scheduler_step_trace",
+    "simulate_scheduler_stream", "synthesize_requests",
 ]

@@ -46,6 +46,17 @@ class GenerationResult:
     steps: int
 
 
+@dataclass
+class SchedulerRunResult:
+    """One continuous-batching run: per-request generated ids (rid-keyed;
+    a request's array has exactly ``max_new_tokens`` entries), the
+    scheduler's run statistics (makespan, lane occupancy, bank-occupancy
+    skew), and the tick count."""
+    outputs: dict[int, np.ndarray]
+    stats: dict
+    ticks: int
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, rc: RunConfig, params, ax: Axes,
                  max_batch: int = 8, max_seq: int = 256,
@@ -75,8 +86,11 @@ class ServeEngine:
             lambda p, tok, cache, pos: T.decode_step(cfg, rc, p, tok, cache,
                                                      pos, ax))
         self._decode_paged = jax.jit(self._paged_step)
+        self._decode_sched = jax.jit(self._scheduler_step)
         self._step_traces: list = []
         self._prefill_trace = None
+        self._sched_traces: list = []
+        self._sched_meta: dict = {}
         #: final PageTableState of the last paged generate (bank occupancy
         #: introspection: ``kvcache.bank_load_stats(engine.last_pages)``)
         self.last_pages: KV.PageTableState | None = None
@@ -232,6 +246,224 @@ class ServeEngine:
                 pools[f"b{j}s{sb}"] = {"k": pool_of(bc["k"][sb]),
                                        "v": pool_of(bc["v"][sb])}
         return pools, pages, ssm
+
+    # -- continuous-batching (lane-ragged) decode path -----------------------
+
+    def _paged_attention_decode_ragged(self, cfg, p, x, cache, pos, ax, *,
+                                       window: int = 0, page_table=None,
+                                       active=None, scratch=0):
+        """``_paged_attention_decode`` with per-lane positions: each lane
+        attends up to its OWN sequence position (``pos`` is (B,), not a
+        scalar) and writes back its own current page.  Lanes with no
+        resident sequence (``active`` False) insert nothing and scatter to
+        the reserved ``scratch`` page — the Pallas scatter has no lane
+        predication, so idle lanes need a harmless sink (the trace
+        predicates them off; see ``scheduler.scheduler_step_trace``)."""
+        kv = self.kv_cfg
+        arch = self.mem_arch
+        b = x.shape[0]
+        plen = kv.page_len
+        n_pt = page_table.shape[1]
+        s_all = n_pt * plen
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+        q, k_new, v_new = L._qkv(cfg, p, x, pos[:, None], ax)
+        ids = jnp.maximum(page_table, 0).reshape(-1)
+        ck = KV.gather_pages(arch, kv, cache["k"], ids,
+                             interpret=self.kernel_interpret)
+        cv = KV.gather_pages(arch, kv, cache["v"], ids,
+                             interpret=self.kernel_interpret)
+        ck = ck.reshape(b, s_all, kvh, hd)
+        cv = cv.reshape(b, s_all, kvh, hd)
+        idx = jnp.arange(s_all)
+        hot = ((idx[None, :] == pos[:, None])
+               & active[:, None])[:, :, None, None]
+        ck = jnp.where(hot, k_new.astype(ck.dtype), ck)
+        cv = jnp.where(hot, v_new.astype(cv.dtype), cv)
+        valid = ((idx[None, :] <= pos[:, None]) & active[:, None]
+                 & jnp.repeat(page_table >= 0, plen, axis=1))
+        if window:
+            valid &= (pos[:, None] - idx[None, :]) < window
+        s = jnp.einsum("bqkgh,btkh->bkgqt", q,
+                       ck.astype(q.dtype)) / math.sqrt(hd)
+        s = L.softcap(s, cfg.attn_softcap)
+        s = jnp.where(valid[:, None, None, None, :], s, L.NEG_INF)
+        pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgqt,btkh->bqkgh", pr, cv.astype(q.dtype))
+        o = o.reshape(b, 1, cfg.n_heads, hd)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+        # per-lane read-modify-write append of each lane's current page
+        pg = jnp.minimum(pos // plen, n_pt - 1)
+        cur = jnp.where(active,
+                        jnp.maximum(page_table[jnp.arange(b), pg], 0),
+                        scratch)
+        line = (pg * plen)[:, None] + jnp.arange(plen)[None, :]
+        k_line = jnp.take_along_axis(ck, line[:, :, None, None], axis=1)
+        v_line = jnp.take_along_axis(cv, line[:, :, None, None], axis=1)
+        kp = KV.scatter_pages(arch, kv, cache["k"], cur,
+                              k_line.reshape(b, -1),
+                              interpret=self.kernel_interpret)
+        vp = KV.scatter_pages(arch, kv, cache["v"], cur,
+                              v_line.reshape(b, -1),
+                              interpret=self.kernel_interpret)
+        return out, {"k": kp, "v": vp}
+
+    def _scheduler_step(self, params, tok, pools, page_table, pos, active,
+                        scratch):
+        """One lane-ragged full-model decode step (jit'd once; the page
+        table, per-lane positions and active mask are traced values with
+        static shapes, so admissions/completions never recompile).  The
+        host-side ``scheduler.Scheduler`` owns allocation — unlike
+        ``_paged_step`` there is no in-graph ``allocate_pages``."""
+        cfg, rc, ax = self.cfg, self.rc, self.ax
+        dtype = jnp.dtype(rc.compute_dtype)
+        x = params["embed"].astype(dtype)[tok]
+        pattern = cfg.block_pattern()
+        pools = dict(pools)
+        attn_fn = functools.partial(
+            self._paged_attention_decode_ragged, page_table=page_table,
+            active=active, scratch=scratch)
+        for sb in range(cfg.n_superblocks):
+            for j, (kind, is_moe) in enumerate(pattern):
+                p_sb = jax.tree.map(lambda a: a[sb],
+                                    params["blocks"][f"b{j}"])
+                key = f"b{j}s{sb}"
+                x, pools[key] = T.apply_block_decode(
+                    cfg, rc, p_sb, x, pools[key], pos, ax, kind, is_moe,
+                    j, attn_fn=attn_fn)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = T._unembed(cfg, params, x)
+        return logits, pools
+
+    def _ingest_request(self, pools, prompt: np.ndarray, page_ids):
+        """Prefill ONE request and scatter its K/V prompt pages into the
+        shared pools at the scheduler-allocated ids (one jit compile per
+        distinct prompt length).  Returns the updated pools and the
+        request's first generated token id.  K/V slots past the prompt in
+        its last page stay zero; every decode mask is ``idx <= pos``, so a
+        stale slot is never read before the decode step that writes it."""
+        kv = self.kv_cfg
+        plen = int(prompt.shape[0])
+        n_pref = -(-plen // kv.page_len)
+        logits, cache = self._prefill(self.params, jnp.asarray(prompt)[None])
+        first = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
+        ids = jnp.asarray(np.asarray(page_ids, np.int32))
+
+        def write(pool, kc):
+            # kc: (1, t, KV, HD) with t ≤ plen (SWA keeps only the window)
+            t = kc.shape[1]
+            buf = jnp.zeros((1, n_pref * kv.page_len) + kc.shape[2:],
+                            kc.dtype)
+            buf = buf.at[:, plen - t:plen].set(kc)
+            rows = buf.reshape(n_pref, kv.row_width)
+            return KV.scatter_pages(self.mem_arch, kv, pool, ids, rows,
+                                    interpret=self.kernel_interpret)
+
+        pools = dict(pools)
+        for j, (kind, _) in enumerate(self.cfg.block_pattern()):
+            bc = cache["blocks"][f"b{j}"]
+            for sb in range(self.cfg.n_superblocks):
+                key = f"b{j}s{sb}"
+                pools[key] = {"k": write(pools[key]["k"], bc["k"][sb]),
+                              "v": write(pools[key]["v"], bc["v"][sb])}
+        return pools, first
+
+    def run_scheduler(self, requests, policy="seq-skew",
+                      scheduler=None) -> SchedulerRunResult:
+        """Continuous-batching generation: drive real lane-ragged decode
+        steps from ``scheduler.Scheduler`` (greedy sampling).
+
+        The same scheduler instance that picks lanes and allocates pages
+        also emits the run's ``AddressTrace`` blocks, and this driver feeds
+        the scheduler's OWN page-table/position/active snapshots to the
+        jit'd step — so the recorded live trace (``scheduler_stream()``) is
+        bit-equal to ``scheduler.simulate_scheduler_stream`` on the same
+        traffic by construction (pinned in tests/test_scheduler.py).
+
+        Requests need prompt ``tokens``; admission order, page placement
+        and completion order are exactly the simulation's.  The live path
+        requires an attention-only model (SSM/hybrid lane state is not
+        re-admittable yet — simulation and costing work for any traffic).
+        """
+        from repro.serving.scheduler import Scheduler
+        if self.kv_mode != "paged":
+            raise ValueError("run_scheduler requires kv_mode='paged'")
+        if any(kind != "attn" for kind, _ in self.cfg.block_pattern()):
+            raise NotImplementedError(
+                "run_scheduler supports attention-only models (per-lane "
+                "SSM state eviction/re-admission is not implemented); "
+                "hybrid traffic can still be simulated and costed via "
+                "scheduler.simulate_scheduler_stream")
+        sched = scheduler or Scheduler(
+            self.kv_cfg, n_lanes=self.max_batch, max_seq=self.max_seq,
+            policy=policy, n_kv_layers=self.n_kv_layers)
+        dtype = jnp.dtype(self.rc.compute_dtype)
+        pools = {}
+        for j, (kind, _) in enumerate(self.cfg.block_pattern()):
+            for sb in range(self.cfg.n_superblocks):
+                zero = jnp.zeros((self.kv_cfg.n_pages, self.kv_cfg.row_width),
+                                 dtype)
+                pools[f"b{j}s{sb}"] = {"k": zero, "v": zero}
+        scratch = jnp.asarray(sched.scratch_page or 0, jnp.int32)
+        lane_tok = jnp.zeros((self.max_batch, 1), jnp.int32)
+        lane_rid = np.full(self.max_batch, -1, np.int64)
+        toks: dict[int, list] = {}
+        outputs: dict[int, np.ndarray] = {}
+        self._sched_traces = []
+        for ev in sched.run(requests):
+            for c in ev.completed:
+                outputs[c.request.rid] = np.asarray(
+                    toks.pop(c.request.rid, []), np.int32)
+                lane_rid[c.lane] = -1
+            for adm in ev.admitted:
+                r = adm.request
+                if r.tokens is None:
+                    raise ValueError(
+                        f"request {r.rid} has no prompt tokens; synthesize "
+                        f"with vocab_size= or attach tokens for live runs")
+                pools, first = self._ingest_request(
+                    pools, np.asarray(r.tokens, np.int32), adm.page_ids)
+                lane_rid[adm.lane] = r.rid
+                toks[r.rid] = [first] if r.max_new_tokens >= 1 else []
+                lane_tok = lane_tok.at[adm.lane, 0].set(first)
+            if ev.decoded:
+                logits, pools = self._decode_sched(
+                    self.params, lane_tok, pools,
+                    jnp.asarray(ev.page_table), jnp.asarray(ev.pos),
+                    jnp.asarray(ev.active), scratch)
+                nxt = jnp.argmax(logits[:, -1, :self.cfg.vocab_size],
+                                 axis=-1).astype(jnp.int32)[:, None]
+                lane_tok = jnp.where(jnp.asarray(ev.active)[:, None],
+                                     nxt, lane_tok)
+                nxt_np = np.asarray(nxt[:, 0])
+                for lane in np.flatnonzero(ev.active):
+                    toks[int(lane_rid[lane])].append(int(nxt_np[lane]))
+            self._sched_traces.extend(ev.traces)
+        self._sched_meta = {"what": "scheduler-live",
+                            "arch": self.mem_arch.name,
+                            "policy": sched.policy_name,
+                            "n_requests": len(outputs), "ticks": sched.now}
+        return SchedulerRunResult(outputs=outputs, stats=sched.stats(),
+                                  ticks=sched.now)
+
+    def scheduler_stream(self):
+        """The last ``run_scheduler``'s KV traffic as a re-iterable
+        ``TraceStream`` of the recorded per-tick blocks (same ``Trace``
+        protocol as ``serving_stream``; bit-equal to the simulated
+        lowering of the same traffic)."""
+        from repro.core.trace import TraceStream
+        if not self._sched_traces:
+            raise RuntimeError("no scheduler traces; run run_scheduler()")
+        return TraceStream(list(self._sched_traces),
+                           meta=dict(self._sched_meta))
+
+    def scheduler_cost(self, archs=None, block_ops: int | None = None):
+        """Price the last ``run_scheduler`` traffic (one fused ``cost_many``
+        pass; list ``archs`` for a comparison, default this engine's)."""
+        from repro.core.cost_engine import cost_many
+        stream = self.scheduler_stream()
+        if archs is None:
+            return cost_many([self.mem_arch], stream, block_ops=block_ops)[0]
+        return cost_many(list(archs), stream, block_ops=block_ops)
 
     # -- dense reference path ----------------------------------------------
 

@@ -52,7 +52,55 @@ __all__ = [
     "pool_rows", "gather_pages", "scatter_pages",
     "kv_read_stream", "decode_step_trace", "prefill_trace",
     "simulate_serving_trace", "simulate_serving_stream",
+    "ALLOC_POLICIES", "preferred_banks", "resolve_policy",
 ]
+
+
+# --------------------------------------------------------------------------
+# preferred-bank allocation policies
+# --------------------------------------------------------------------------
+
+#: preferred-bank policies: ``(map_bank, seq_key, n_banks) -> bank``.
+#: ``map_bank`` is the architecture's bank map applied to the in-sequence
+#: page index; ``seq_key`` identifies the requesting sequence (lane index in
+#: the fixed-batch allocator, request id in the continuous-batching
+#: scheduler).  Works on python ints, numpy and jnp arrays alike — the same
+#: formula drives both the jit'd batch allocator and the host-side scheduler
+#: pool (repro/serving/scheduler.py).
+#:
+#:   * ``"paper"``    — every sequence prefers ``map_bank`` for page index k
+#:     (the pre-scheduler behavior): same-index pages of concurrent
+#:     sequences all contend for one bank at allocation time, so the
+#:     same-position page scatter of a batch decode step serializes.
+#:   * ``"seq-skew"`` — rotate the preferred bank by the sequence key:
+#:     same-index pages of different sequences land ``seq_key`` banks apart,
+#:     de-conflicting both the allocation batch and the same-position
+#:     read/write ops (docs/SERVING.md has the 16B-xor worked example).
+ALLOC_POLICIES = {
+    "paper": lambda bank, seq_key, n_banks: bank,
+    "seq-skew": lambda bank, seq_key, n_banks: (bank + seq_key) % n_banks,
+}
+
+
+def resolve_policy(policy):
+    """A policy name or callable -> the ``(bank, seq_key, n_banks) -> bank``
+    callable (names come from ``ALLOC_POLICIES``)."""
+    if callable(policy):
+        return policy
+    try:
+        return ALLOC_POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown allocation policy {policy!r}; choose from "
+            f"{tuple(ALLOC_POLICIES)} or pass a callable") from None
+
+
+def preferred_banks(layout, page_idx, seq_key, policy="paper"):
+    """The bank each (sequence, in-sequence page index) request prefers:
+    the arch's bank map on the page index, skewed by the policy.  Pure
+    arithmetic — vectorized over numpy or jnp inputs."""
+    bank, _ = layout.bank_slot(page_idx)
+    return resolve_policy(policy)(bank, seq_key, layout.n_banks)
 
 
 def pool_pages(n_banks: int, batch: int, max_seq: int, page_len: int,
@@ -149,15 +197,22 @@ def init_state(cfg: PagedKVConfig, batch: int, max_seq: int,
 
 
 def allocate_pages(cfg: PagedKVConfig, state: PageTableState,
-                   need: Array) -> tuple[PageTableState, Array]:
+                   need: Array, policy="paper") -> tuple[PageTableState,
+                                                         Array]:
     """Allocate one page for every sequence with need[b]=True.
 
-    Phase 1 (the arbiter): preferred bank = bank_map(in-sequence page
-    index); grant order = exclusive cumsum per bank; grants within the
-    bank's free capacity succeed.  Phase 2 (capacity spill — TPUs can't
-    stall): the remaining requests take slots from the global free list,
-    least-loaded banks first, via a searchsorted over cumulative free
-    counts.  Succeeds while any free page exists.
+    Phase 1 (the arbiter): preferred bank = ``policy`` applied to
+    bank_map(in-sequence page index) and the lane index (the free-page
+    selection hook — ``"paper"`` keeps the pre-policy behavior, every lane
+    preferring the same bank for page k; ``"seq-skew"`` rotates by lane so
+    concurrent same-index pages stop contending; see ``ALLOC_POLICIES``);
+    grant order = exclusive cumsum per bank; grants within the bank's free
+    capacity succeed.  Phase 2 (capacity spill — TPUs can't stall): the
+    remaining requests take slots from the global free list, least-loaded
+    banks first, via a searchsorted over cumulative free counts (the sort
+    is stable, so equal-load ties always break toward the lowest bank
+    index — allocation is fully deterministic).  Succeeds while any free
+    page exists.
 
     Returns (new state, (B,) logical pool page ids or -1).  The id is
     minted via ``BankedLayout.logical_row(bank, slot)``, so the arch's bank
@@ -167,7 +222,7 @@ def allocate_pages(cfg: PagedKVConfig, state: PageTableState,
     cap = cfg.pages_per_bank
     lay = cfg.layout
     logical = state.seq_lens // cfg.page_len            # next in-seq page
-    pref_bank, _ = lay.bank_slot(logical)               # arch's bank map
+    pref_bank = preferred_banks(lay, logical, jnp.arange(b), policy)
     need_i = need.astype(jnp.int32)
 
     # phase 1: arbiter grants at the preferred bank
@@ -180,7 +235,7 @@ def allocate_pages(cfg: PagedKVConfig, state: PageTableState,
     # phase 2: spill to the global free list (least-loaded banks first)
     overflow = need & ~ok1
     rank = jnp.cumsum(overflow.astype(jnp.int32)) - overflow  # 0-based
-    order = jnp.argsort(used1)                          # ascending load
+    order = jnp.argsort(used1, stable=True)             # ascending load
     free_sorted = (cap - used1)[order]
     cum = jnp.cumsum(free_sorted)
     sidx = jnp.searchsorted(cum, rank, side="right")
@@ -253,12 +308,25 @@ def gather_kv(cfg: PagedKVConfig, state: PagedKVState,
 
 
 def bank_load_stats(state) -> dict:
-    """Paper-style bank efficiency of the current allocation (accepts a
-    ``PageTableState`` or anything carrying ``.pages``)."""
+    """Paper-style bank efficiency of the current allocation, plus the
+    per-bank occupancy-skew measures the preferred-bank policies are judged
+    on.  Accepts a ``PageTableState``, anything carrying ``.pages``, a
+    scheduler pool (anything with ``.bank_used``), or a raw per-bank
+    occupancy vector.
+
+    Keys: ``max`` / ``min`` / ``mean`` occupancy, ``serialization``
+    (max/mean — the batch allocator's cycle multiplier),
+    ``max_min_ratio`` (max over the emptiest bank, ∞-free: min clamped to
+    1 page) and ``mad`` (mean absolute deviation from the mean — 0 for a
+    perfectly level pool)."""
     pages = getattr(state, "pages", state)
-    used = pages.bank_used.astype(jnp.float32)
-    return {"max": used.max(), "mean": used.mean(),
-            "serialization": used.max() / jnp.maximum(used.mean(), 1e-9)}
+    used = getattr(pages, "bank_used", pages)
+    used = jnp.asarray(used).astype(jnp.float32)
+    mean = used.mean()
+    return {"max": used.max(), "min": used.min(), "mean": mean,
+            "serialization": used.max() / jnp.maximum(mean, 1e-9),
+            "max_min_ratio": used.max() / jnp.maximum(used.min(), 1.0),
+            "mad": jnp.abs(used - mean).mean()}
 
 
 # --------------------------------------------------------------------------

@@ -144,6 +144,19 @@ def _objective_fn(objective, capacity_kb):
         return lambda rec, a: rec["time_us"]
     if objective == "cycles":
         return lambda rec, a: rec["total_cycles"]
+    if objective == "us_per_token":
+        # scheduler-traffic objective: serving time per generated token —
+        # the record's workload meta must carry ``n_tokens`` (e.g.
+        # ``bench.scheduler_workload``'s seeded day).  Same ranking as
+        # time_us on ONE day, but comparable across days/traffic mixes.
+        def per_token(rec, a):
+            n = rec.get("n_tokens")
+            if not n:
+                raise ValueError(
+                    "objective='us_per_token' needs a workload whose meta "
+                    "carries n_tokens (e.g. bench.scheduler_workload)")
+            return rec["time_us"] / n
+        return per_token
     if objective == "area_time":
         if capacity_kb is None:
             raise ValueError("objective='area_time' needs capacity_kb")
@@ -151,7 +164,8 @@ def _objective_fn(objective, capacity_kb):
         return lambda rec, a: area_time_score(a.spec, capacity_kb,
                                               rec["time_us"])
     raise ValueError(f"unknown objective {objective!r}; use 'time_us', "
-                     f"'cycles', 'area_time', or a callable")
+                     f"'cycles', 'area_time', 'us_per_token', or a "
+                     f"callable")
 
 
 def _evaluator(kernel, workload):

@@ -31,6 +31,17 @@ def test_serve_cli_smoke():
     assert out.stdout.count("req") >= 2
 
 
+def test_serve_cli_schedule_smoke():
+    out = _run(["repro.launch.serve", "--arch", "llama3.2-1b", "--schedule",
+                "--batch", "2", "--prompt-len", "8", "--new-tokens", "8",
+                "--n-requests", "3", "--arrival-rate", "2.0",
+                "--context-dist", "short", "--cost"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.count("req") >= 3
+    assert "lane occupancy" in out.stdout
+    assert "scheduler KV traffic" in out.stdout
+
+
 def test_dryrun_cli_help():
     out = _run(["repro.launch.dryrun", "--help"])
     assert out.returncode == 0

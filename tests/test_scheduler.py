@@ -1,0 +1,352 @@
+"""Continuous-batching scheduler (ISSUE 7): lane lifecycle edge cases, the
+free-bitmap page pool, preferred-bank policies, trace-contract validation
+of scheduler streams, live-vs-simulated bit-equality, the streamed
+serving-day acceptance gate, and the multi-tenant tune ranking flip."""
+import jax
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.analysis import validate
+from repro.bench import scheduler_workload, serving_workload, sweep
+from repro.configs import get_smoke_config
+from repro.configs.base import RunConfig
+from repro.core import arch as A
+from repro.core.cost_engine import cost_many
+from repro.launch.sharding import NO_AXES
+from repro.models import init_tree, model_specs
+from repro.serving.engine import ServeEngine
+from repro.serving.kvcache import ALLOC_POLICIES, bank_load_stats
+from repro.serving.scheduler import (PagePool, Request, Scheduler,
+                                     scheduler_pool_config,
+                                     simulate_scheduler_stream,
+                                     synthesize_requests, total_new_tokens)
+
+CFG = get_smoke_config("llama3.2-1b")
+RC = RunConfig(remat="none", attn_impl="dense")
+PARAMS = init_tree(model_specs(CFG), jax.random.PRNGKey(0))
+
+#: the pinned small live-vs-sim traffic (also benchmarks/serving_bench.py
+#: --check): staggered arrivals, a page-boundary prompt, a zero-new-token
+#: request, more requests than lanes — (arrival, prompt_len, max_new)
+TRAFFIC = ((0, 12, 8), (0, 5, 6), (1, 8, 4), (2, 3, 0), (2, 9, 5),
+           (3, 12, 3))
+
+
+def _requests(spec=TRAFFIC, seed=0, tokens=True):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, arrival=a, prompt_len=p, max_new_tokens=m,
+                    tokens=(rng.integers(0, CFG.vocab_size, p)
+                            .astype(np.int32) if tokens else None))
+            for i, (a, p, m) in enumerate(spec)]
+
+
+def _sched(n_lanes=4, max_seq=32, policy="seq-skew", **kw):
+    cfg = scheduler_pool_config("16B", n_lanes, max_seq, page_len=8)
+    return Scheduler(cfg, n_lanes=n_lanes, max_seq=max_seq, policy=policy,
+                     **kw)
+
+
+def _engine(**kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("page_len", 8)
+    return ServeEngine(CFG, RC, PARAMS, NO_AXES, kv_mode="paged", **kw)
+
+
+# -- page pool ---------------------------------------------------------------
+
+def test_pool_alloc_free_roundtrip_and_determinism():
+    cfg = scheduler_pool_config("16B", 4, 64, 8)
+    p1, p2 = PagePool(cfg, policy="seq-skew"), PagePool(cfg, policy="seq-skew")
+    ids1 = [p1.alloc(k, 3) for k in range(8)]
+    ids2 = [p2.alloc(k, 3) for k in range(8)]
+    assert ids1 == ids2                       # deterministic placement
+    assert len(set(ids1)) == 8                # no double allocation
+    lay = cfg.layout
+    banks = [int(b) for b in np.asarray(lay.bank_slot(np.array(ids1))[0])]
+    skew = ALLOC_POLICIES["seq-skew"]
+    assert banks == [skew(int(np.asarray(lay.bank_slot(np.array(k))[0])),
+                          3, cfg.n_banks) for k in range(8)]
+    p1.release(ids1)
+    assert p1.n_free == cfg.n_pages
+    with pytest.raises(ValueError):
+        p1.release([ids1[0]])                 # double free
+
+
+def test_pool_spills_to_least_loaded_and_exhausts():
+    cfg = scheduler_pool_config("16B", 2, 16, 8)   # tiny pool
+    pool = PagePool(cfg, policy="paper")
+    n = cfg.n_pages
+    ids = [pool.alloc(0, 0) for _ in range(n)]     # all prefer bank 0
+    assert len(set(ids)) == n                      # spill found every page
+    assert pool.n_free == 0
+    with pytest.raises(RuntimeError):
+        pool.alloc(0, 0)
+    # spill is deterministic and balanced: per-bank loads differ by <= 1
+    used = pool.bank_used
+    assert int(used.max()) - int(used.min()) <= 1
+
+
+def test_bank_load_stats_reports_skew():
+    s = bank_load_stats(np.array([4, 2, 0, 6]))
+    assert float(s["max"]) == 6 and float(s["min"]) == 0
+    assert float(s["mad"]) == 2.0
+    assert float(s["max_min_ratio"]) == 6.0
+
+
+# -- lane lifecycle ----------------------------------------------------------
+
+def test_all_lanes_busy_queues_fcfs():
+    """6 requests on 4 lanes: the last two wait, then enter freed lanes in
+    FCFS order; every request completes with its full token budget."""
+    s = _sched()
+    events = list(s.run(_requests(tokens=False)))
+    adm = [(a.request.rid, a.lane, e.tick) for e in events
+           for a in e.admitted]
+    assert [r for r, _, _ in adm[:4]] == [0, 1, 2, 3]   # lanes fill FCFS
+    assert {r for r, _, _ in adm[4:]} == {4, 5}
+    t4 = next(t for r, _, t in adm if r == 4)
+    t5 = next(t for r, _, t in adm if r == 5)
+    assert t4 <= t5                                     # FCFS by arrival
+    comp = [c.request.rid for e in events for c in e.completed]
+    assert sorted(comp) == [0, 1, 2, 3, 4, 5]
+    assert comp != sorted(comp)          # ragged: NOT in admission order
+    assert s.pool.n_free == s.pool.free.size - 1        # scratch reserved
+
+
+def test_zero_new_token_request_releases_lane_without_decoding():
+    s = _sched()
+    events = list(s.run([Request(0, 0, prompt_len=3, max_new_tokens=0)]))
+    assert not any(e.decoded for e in events)
+    assert sum(len(e.traces) for e in events) == 1      # prefill only
+    comp = [c for e in events for c in e.completed]
+    assert [c.request.rid for c in comp] == [0]
+    assert s.pool.n_free == s.pool.free.size - 1        # pages returned
+
+
+def test_cancel_mid_flight_frees_lane_for_readmission():
+    """Evict a long request mid-generation; the queued request is admitted
+    into the SAME lane, and the evicted request's pages return first."""
+    s = _sched(n_lanes=1, max_seq=32)
+    long_req = Request(0, 0, prompt_len=8, max_new_tokens=20)
+    queued = Request(1, 0, prompt_len=8, max_new_tokens=2)
+    s.submit([long_req, queued])
+    ev0 = s.tick()
+    assert ev0.admitted[0].request.rid == 0 and ev0.admitted[0].lane == 0
+    s.tick()
+    s.cancel(0)
+    ev = s.tick()                       # eviction + re-admission same tick
+    assert [c.request.rid for c in ev.completed] == [0]
+    assert ev.completed[0].cancelled
+    assert [a.request.rid for a in ev.admitted] == [1]
+    assert ev.admitted[0].lane == 0
+    while not s.done():
+        s.tick()
+    assert s.pool.n_free == s.pool.free.size - 1
+
+
+def test_cancel_queued_request_never_admits():
+    s = _sched(n_lanes=1)
+    s.submit(_requests(((0, 4, 2), (0, 4, 2)), tokens=False))
+    s.cancel(1)
+    rids = {a.request.rid for e in s.run() for a in e.admitted}
+    assert rids == {0}
+
+
+def test_requests_validate_and_reject_bad_budgets():
+    with pytest.raises(ValueError):
+        Request(0, 0, prompt_len=0, max_new_tokens=1)
+    with pytest.raises(ValueError):
+        Request(0, 0, prompt_len=4, max_new_tokens=-1)
+    s = _sched(max_seq=16)
+    with pytest.raises(ValueError):
+        s.submit([Request(0, 0, prompt_len=10, max_new_tokens=10)])
+    s.submit([Request(1, 0, prompt_len=4, max_new_tokens=2)])
+    with pytest.raises(ValueError):
+        s.submit([Request(1, 0, prompt_len=4, max_new_tokens=2)])  # dup rid
+
+
+# -- trace contract ----------------------------------------------------------
+
+def test_scheduler_stream_validates_and_reiterates():
+    """Every scheduler-emitted stream passes the trace contract, twice —
+    re-iteration replays a fresh scheduler, bit-identically."""
+    reqs = _requests(tokens=False)
+    for arch in ("16B", "16B-xor", "4R-2W"):
+        stream = simulate_scheduler_stream(arch, reqs, n_lanes=4,
+                                           max_seq=32, n_kv_layers=2)
+        rep1 = validate(stream, arch=arch, block_ops=64)
+        rep2 = validate(stream, arch=arch, block_ops=64)   # re-iterate
+        assert rep1.ok, rep1.violations
+        assert rep1.n_ops == rep2.n_ops > 0
+        assert rep1.n_instructions == rep2.n_instructions
+        t1, t2 = stream.materialize(), stream.materialize()
+        np.testing.assert_array_equal(t1.addrs, t2.addrs)
+        np.testing.assert_array_equal(t1.instr, t2.instr)
+
+
+def test_policy_changes_placement_not_contract():
+    """seq-skew spreads same-index pages of different tenants across banks
+    (the allocation-time contention fix); paper policy leaves them
+    contending.  Both validate; concurrent same-index prefill writes cost
+    strictly fewer store cycles under seq-skew."""
+    spec = tuple((0, 8, 2) for _ in range(8))     # 8 tenants, same shape
+    reqs = _requests(spec, tokens=False)
+    costs = {}
+    for policy in ("paper", "seq-skew"):
+        stream = simulate_scheduler_stream("16B", reqs, n_lanes=8,
+                                           max_seq=32, policy=policy)
+        assert validate(stream, arch="16B", block_ops=64).ok
+        costs[policy] = cost_many([A.get("16B")], stream)[0]
+    assert (costs["seq-skew"].store_cycles
+            < costs["paper"].store_cycles)
+    assert costs["seq-skew"].n_store_ops == costs["paper"].n_store_ops
+
+
+def test_seq_skew_flattens_bank_occupancy():
+    """16 single-page tenants: under the paper policy every page-0 prefers
+    bank 0 (half land there, half spill), while seq-skew rotates each
+    tenant to its own bank — measured by the new ``bank_load_stats`` skew
+    fields on the live pool mid-flight."""
+    spec = tuple((0, 8, 2) for _ in range(16))    # one page per tenant
+    mads = {}
+    for policy in ("paper", "seq-skew"):
+        s = _sched(n_lanes=16, max_seq=32, policy=policy)
+        s.submit(_requests(spec, tokens=False))
+        s.tick()                                  # admissions allocate
+        mads[policy] = float(bank_load_stats(s.pool)["mad"])
+    assert mads["seq-skew"] < mads["paper"]
+    assert mads["seq-skew"] < 0.2                 # one page per bank (+scratch)
+
+
+# -- live engine -------------------------------------------------------------
+
+def test_run_scheduler_matches_generate_greedy():
+    """A one-request day reduces to fixed-batch greedy decode: identical
+    tokens (paged==dense parity of PR 3 then covers the scheduler too)."""
+    eng = _engine()
+    reqs = _requests(((0, 12, 8),))
+    out = eng.run_scheduler(reqs).outputs[0]
+    want = eng.generate(reqs[0].tokens[None, :], max_new_tokens=8).tokens[0]
+    np.testing.assert_array_equal(out, want)
+
+
+def test_run_scheduler_lanes_are_independent():
+    """A request decodes the same tokens alone and co-scheduled: ragged
+    attention masks per-lane positions, so tenants never leak."""
+    eng = _engine()
+    reqs = _requests(((0, 12, 6), (0, 8, 4), (1, 5, 5)))
+    alone = eng.run_scheduler([reqs[0]]).outputs[0]
+    together = eng.run_scheduler(reqs).outputs
+    np.testing.assert_array_equal(together[0], alone)
+    for r in reqs:
+        assert len(together[r.rid]) == r.max_new_tokens
+
+
+def test_live_trace_bit_equal_to_simulated_lowering():
+    """The acceptance pin: the live ``run_scheduler`` trace is bit-equal
+    to the model-free simulated lowering of the same traffic, with pinned
+    op count and cycles (also gated by serving_bench --check)."""
+    eng = _engine()
+    reqs = _requests()
+    res = eng.run_scheduler(reqs, policy="seq-skew")
+    for r in reqs:
+        assert len(res.outputs[r.rid]) == r.max_new_tokens
+    live = eng.scheduler_stream().materialize()
+    sim = simulate_scheduler_stream(
+        eng.mem_arch, reqs, n_lanes=4, max_seq=32, page_len=8,
+        n_kv_layers=eng.n_kv_layers, policy="seq-skew").materialize()
+    np.testing.assert_array_equal(live.addrs, sim.addrs)
+    np.testing.assert_array_equal(live.kinds, sim.kinds)
+    np.testing.assert_array_equal(live.instr, sim.instr)
+    np.testing.assert_array_equal(np.asarray(live.mask),
+                                  np.asarray(sim.mask))
+    assert live.n_ops == 80
+    assert A.get("16B").cost(live).total_cycles == 2800
+    assert A.get("4R-2W").cost(live).total_cycles == 128
+    assert res.ticks == 8
+
+
+def test_run_scheduler_rejects_dense_and_hybrid():
+    dense = ServeEngine(CFG, RC, PARAMS, NO_AXES, max_batch=4, max_seq=32,
+                        kv_mode="dense")
+    with pytest.raises(ValueError):
+        dense.run_scheduler(_requests())
+    with pytest.raises(ValueError):           # tokens required on live path
+        _engine().run_scheduler(_requests(((0, 4, 2),), tokens=False))
+
+
+# -- the serving day through the streaming protocol --------------------------
+
+def test_thousand_sequence_day_costs_in_block_memory():
+    """The ISSUE 7 acceptance gate: a ≥1000-sequence mixed day is costed
+    end-to-end through the streaming ``Trace`` protocol with host peak
+    memory well under the dense (ops × 16) matrix it never builds."""
+    import tracemalloc
+    wl = scheduler_workload(n_requests=1000, arrival_rate=2.0,
+                            context_dist="mixed", n_lanes=16, max_seq=128,
+                            n_kv_layers=2, seed=0)
+    a16 = A.get("16B")
+    stream = wl.stream_fn(a16)
+    n_ops = sum(b.n_ops for b in stream.blocks(block_ops=2048))
+    assert n_ops > 30_000
+    cost_many([a16], stream, block_ops=2048)        # warm jit outside gate
+    tracemalloc.start()
+    try:
+        cost = cost_many([a16], stream, block_ops=2048)[0]
+        peak = tracemalloc.get_traced_memory()[1]
+    finally:
+        tracemalloc.stop()
+    assert cost.total_cycles > 0
+    assert peak < n_ops * 16 * 4    # streamed < the dense matrix
+
+
+def test_scheduler_workload_sweeps_and_reports_tokens():
+    wl = scheduler_workload(n_requests=16, arrival_rate=1.0,
+                            context_dist="short", n_lanes=4, max_seq=64,
+                            seed=0)
+    recs = list(sweep(["16B", "4R-2W"], [wl]))
+    assert len(recs) == 2
+    assert all(r["n_tokens"] == wl.meta["n_tokens"] > 0 for r in recs)
+    assert all(r["total_cycles"] > 0 for r in recs)
+
+
+def test_synthesize_requests_deterministic_and_bounded():
+    a = synthesize_requests(50, 2.0, "mixed", max_seq=64, seed=3)
+    b = synthesize_requests(50, 2.0, "mixed", max_seq=64, seed=3)
+    assert [(r.arrival, r.prompt_len, r.max_new_tokens) for r in a] == \
+           [(r.arrival, r.prompt_len, r.max_new_tokens) for r in b]
+    assert all(r.total_len <= 64 for r in a)
+    assert total_new_tokens(a) > 0
+    arrivals = [r.arrival for r in a]
+    assert arrivals == sorted(arrivals)
+    with pytest.raises(ValueError):
+        synthesize_requests(4, 1.0, "nope")
+
+
+# -- tune: the multi-tenant ranking flip -------------------------------------
+
+def test_tune_ranking_flips_under_multitenant_load():
+    """ISSUE 7 acceptance: the fixed-batch serving winner (4R-2W, pinned
+    in PR 3) loses a low-arrival-rate continuous-batching day to 4R-1W —
+    sparse multi-tenant traffic is read-dominated (long per-lane page-list
+    gathers, few concurrent admission writes), so the second write port
+    stops paying for itself.  ``us_per_token`` is the scheduler-traffic
+    objective."""
+    fixed = tune.search(workload=serving_workload(
+        batch=4, prompt_len=16, decode_steps=8, page_len=4, n_kv_layers=2))
+    assert fixed[0].arch == "4R-2W"            # the PR 3 pin, unchanged
+    day = tune.search(workload=scheduler_workload(
+        n_requests=48, arrival_rate=0.5, context_dist="long", n_lanes=8,
+        max_seq=128, n_kv_layers=2, seed=0), objective="us_per_token")
+    assert day[0].arch == "4R-1W"              # the flip
+    assert day[0].objective < day[1].objective
+    assert {r.arch for r in day} == {r.arch for r in fixed}
+
+
+def test_us_per_token_objective_needs_token_meta():
+    with pytest.raises(ValueError):
+        tune.search(workload=serving_workload(
+            batch=2, prompt_len=8, decode_steps=4, page_len=4),
+            objective="us_per_token")
