@@ -1,0 +1,224 @@
+"""Whole-model decode traffic priced on every paper memory (ISSUE 8 /
+ROADMAP item 2: "which memory architecture serves a whole Llama-style
+decode step", not one kernel at a time).
+
+Two sections:
+
+  * ``model_*`` rows — one decode step of each model config
+    (llama3_2_1b / mixtral_8x22b / jamba_v0_1_52b) lowered by
+    ``repro.models.model_step_trace``: attention QKV/O rows + RoPE gather
+    + paged-KV page gathers, MoE all-to-all dispatch through the
+    carry-chain arbiter, and SSM stride-N state updates, stitched per the
+    config's layer pattern into one streamed ``Trace`` and priced per
+    architecture (the KV page allocator follows the arch's bank map).
+  * the headline ranking — ``tune.search`` over the nine paper memories on
+    each whole step vs. the per-kernel winners of ``attn_decode`` /
+    ``moe_a2a`` / ``ssm_scan`` in isolation: does whole-application
+    traffic flip the microkernel verdict (the eGPU-paper question)?
+
+CSV: name,us_per_call,derived.  ``--smoke`` runs llama3_2_1b only (CI
+gate).  ``--check`` additionally gates (exit non-zero on failure):
+
+  * the pinned headline: the llama3_2_1b whole-step winner reproduces
+    (and its flip-vs-``attn_decode``-winner verdict holds);
+  * O(block) streaming: a whole mixtral_8x22b step (~109k ops) priced
+    through the stream with host peak memory (tracemalloc) bounded well
+    under the dense (ops × 16) matrix it never materializes.
+
+Results are appended to ``BENCH_cost.json`` under the ``"model"`` key
+(other sections are left untouched).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+import tracemalloc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+
+from repro.bench import model_workload, sweep
+from repro.core.arch import PAPER_ARCHITECTURES
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(ROOT, "BENCH_cost.json")
+
+CONFIGS = ("llama3_2_1b", "mixtral_8x22b", "jamba_v0_1_52b")
+BATCH, PROMPT_LEN, PAGE_LEN = 4, 32, 8
+BLOCK_OPS = 4096
+
+#: canonical per-kernel tune points (the analysis CLI's check points)
+KERNEL_POINTS = {
+    "attn_decode": (np.array([[0, 3, 6, -1], [1, 4, -1, -1],
+                              [2, 5, 7, -1]], np.int32),
+                    np.array([17, 9, 21]), 64, 4, 8),
+    "moe_a2a": (np.random.default_rng(0).integers(0, 8, size=64)
+                .astype(np.int32), 8, 16),
+    "ssm_scan": (2, 64, 16, 4),
+}
+
+#: --check pins: the whole-llama3_2_1b-step winner on raw time, and
+#: whether it flips the per-kernel attn_decode winner (tests pin the same
+#: facts — tests/test_model_traces.py)
+PIN_MODEL_WINNER = "16B"
+PIN_ATTN_KERNEL_WINNER = "4R-1W"
+PIN_FLIPS = True
+#: --check pin for the streamed-step gate
+PEAK_HEADROOM = 2.0   # dense matrix must be ≥ 2x the streamed peak
+
+
+def workloads(smoke: bool = False):
+    cfgs = CONFIGS[:1] if smoke else CONFIGS
+    return [model_workload(c, batch=BATCH, prompt_len=PROMPT_LEN,
+                           page_len=PAGE_LEN, block_ops=BLOCK_OPS)
+            for c in cfgs]
+
+
+def rows(smoke: bool = False):
+    out = []
+    for rec in sweep(PAPER_ARCHITECTURES, workloads(smoke)):
+        out.append({
+            "name": f"{rec['workload']}_{rec['arch']}",
+            "workload": rec["workload"], "arch": rec["arch"],
+            "us_per_call": round(rec["time_us"], 2),
+            "us_per_token": round(rec["time_us"] / rec["n_tokens"], 4),
+            "total_cycles": rec["total_cycles"],
+            "load_cycles": rec["load_cycles"],
+            "store_cycles": rec["store_cycles"],
+            "r_bank_eff": rec["r_bank_eff"],
+            "w_bank_eff": rec["w_bank_eff"],
+        })
+    return out
+
+
+def ranking_report(smoke: bool = False) -> dict:
+    """The headline: whole-step winners per model config vs. the winners
+    of the three layer kernels in isolation (flip or no-flip)."""
+    from repro import tune
+    kernel_winners = {
+        name: tune.search(kernel=name, workload=args)[0].arch
+        for name, args in KERNEL_POINTS.items()}
+    model_winners = {}
+    for wl in workloads(smoke):
+        best = tune.search(workload=wl)[0]
+        model_winners[wl.meta["model"]] = {
+            "arch": best.arch, "time_us": round(best.time_us, 2),
+            "us_per_token": round(best.time_us / wl.meta["n_tokens"], 4)}
+    llama = model_winners.get("llama3.2-1b", {}).get("arch")
+    return {
+        "kernel_winners": kernel_winners,
+        "model_winners": model_winners,
+        "llama_flips_attn_kernel": bool(
+            llama and llama != kernel_winners["attn_decode"]),
+    }
+
+
+# -- --check gates -----------------------------------------------------------
+
+def check_streamed_step() -> dict:
+    """Price a whole mixtral_8x22b decode step (56 MoE layers) through the
+    stream and bound the host peak against the dense matrix it must never
+    materialize."""
+    from repro.core import arch as _arch
+    from repro.core.cost_engine import cost_many
+    wl = model_workload("mixtral_8x22b", batch=BATCH, prompt_len=PROMPT_LEN,
+                        page_len=PAGE_LEN, block_ops=BLOCK_OPS)
+    archs = [_arch.resolve(a.name) for a in PAPER_ARCHITECTURES]
+    stream = wl.stream_fn(archs[0])
+    n_ops = sum(b.n_ops for b in stream.blocks(block_ops=BLOCK_OPS))
+    t0 = time.perf_counter()
+    costs = cost_many(archs, stream, block_ops=BLOCK_OPS)  # warm (jit)
+    price_s = time.perf_counter() - t0
+    tracemalloc.start()
+    try:
+        cost_many(archs, stream, block_ops=BLOCK_OPS)
+        peak = tracemalloc.get_traced_memory()[1]
+    finally:
+        tracemalloc.stop()
+    dense = n_ops * 16 * 4
+    return {"workload": "check_streamed_step", "model": "mixtral-8x22b",
+            "n_ops": int(n_ops), "price_s": round(price_s, 2),
+            "stream_peak_bytes": int(peak),
+            "dense_matrix_bytes": int(dense),
+            "total_cycles_16B": costs[[a.name for a in archs].index(
+                "16B")].total_cycles,
+            "ok": bool(dense >= PEAK_HEADROOM * peak)}
+
+
+def check(ranking: dict) -> tuple[list, list]:
+    """CI gate (--smoke --check): returns (check_rows, failure messages)."""
+    failures = []
+    llama = ranking["model_winners"].get("llama3.2-1b", {}).get("arch")
+    if llama != PIN_MODEL_WINNER:
+        failures.append(
+            f"llama3.2-1b whole-step winner {llama!r} != pinned "
+            f"{PIN_MODEL_WINNER!r}")
+    attn = ranking["kernel_winners"]["attn_decode"]
+    if attn != PIN_ATTN_KERNEL_WINNER:
+        failures.append(
+            f"attn_decode kernel winner {attn!r} != pinned "
+            f"{PIN_ATTN_KERNEL_WINNER!r}")
+    if ranking["llama_flips_attn_kernel"] != PIN_FLIPS:
+        failures.append(
+            f"flip verdict changed: whole-step vs attn_decode kernel "
+            f"winner flip={ranking['llama_flips_attn_kernel']}, "
+            f"pinned {PIN_FLIPS}")
+    step = check_streamed_step()
+    if not step["ok"]:
+        failures.append(
+            f"streamed mixtral step peaked at {step['stream_peak_bytes']} B;"
+            f" need ≤ dense matrix {step['dense_matrix_bytes']} B / "
+            f"{PEAK_HEADROOM}")
+    return [step], failures
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    out = rows(smoke=smoke)
+    for r in out:
+        extra = "|".join(f"{k}={v}" for k, v in r.items()
+                         if k not in ("name", "us_per_call", "workload",
+                                      "arch"))
+        print(f"{r['name']},{r['us_per_call']},{extra}")
+    ranking = ranking_report(smoke=smoke)
+    print("# kernel winners "
+          + "; ".join(f"{k}->{v}"
+                      for k, v in sorted(ranking["kernel_winners"].items()))
+          + "; model winners "
+          + "; ".join(f"{k}->{v['arch']}"
+                      for k, v in sorted(ranking["model_winners"].items()))
+          + ("; llama flips attn_decode winner"
+             if ranking["llama_flips_attn_kernel"] else "; no flip"))
+    check_rows, failures = ([], [])
+    if "--check" in argv:
+        check_rows, failures = check(ranking)
+    payload = {}
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            payload = json.load(f)
+    payload["model"] = {
+        "smoke": smoke,
+        "grid": {"configs": list(CONFIGS), "batch": BATCH,
+                 "prompt_len": PROMPT_LEN, "page_len": PAGE_LEN,
+                 "block_ops": BLOCK_OPS},
+        "rows": out, "ranking": ranking, "checks": check_rows,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# appended model section to {OUT_JSON}")
+    if "--check" in argv:
+        if failures:
+            for msg in failures:
+                print(f"# CHECK FAILED: {msg}", file=sys.stderr)
+            raise SystemExit(1)
+        print("# check OK: model winner pinned, flip verdict holds, "
+              "streamed step bounded")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,14 +39,25 @@ def _run_lint(paths) -> int:
 
 
 def _run_prove() -> int:
+    import numpy as np
+
     from repro.analysis.symbolic import cross_check, prove
     from repro.core import arch as A
     from repro.core.trace import AddressTrace
     from repro.isa.programs import fft as fft_prog
     from repro.isa.programs import transpose as tr_prog
+    from repro.kernels import registry as kreg
 
     archs = [A.get(n) for n in PROVE_ARCHS]
     failures = 0
+    rng = np.random.default_rng(0)
+    model_points = (
+        ("attn_decode", (np.array([[0, 3, 6, -1], [1, 4, -1, -1],
+                                   [2, 5, 7, -1]], np.int32),
+                         np.array([17, 9, 21]), 64, 4, 8)),
+        ("moe_a2a", (rng.integers(0, 8, size=64).astype(np.int32), 8, 16)),
+        ("ssm_scan", (2, 64, 16, 4)),
+    )
     points = (
         [(f"transpose {n}x{n}", tr_prog.symbolic_trace(n),
           AddressTrace.from_program(tr_prog.transpose_program(n)))
@@ -54,6 +65,9 @@ def _run_prove() -> int:
         + [(f"fft {n} radix {r}", fft_prog.symbolic_trace(n, r),
             AddressTrace.from_program(fft_prog.fft_program(n, r)))
            for n, r in ((64, 4), (256, 4), (256, 16))]
+        + [(f"kernel {name}", kreg.get(name).symbolic_trace("16B", *args),
+            kreg.get(name).address_trace("16B", *args))
+           for name, args in model_points]
     )
     for label, sym, trace in points:
         try:
@@ -121,6 +135,12 @@ def _run_check() -> int:
         "fft_stage": (np.zeros((1, 256), np.complex64),),
         "moe_dispatch": (rng.integers(0, 8, size=128).astype(np.int32),
                          8, 32),
+        # model traffic lowerings (repro.models.trace)
+        "attn_decode": (np.array([[0, 3, 6, -1], [1, 4, -1, -1],
+                                  [2, 5, 7, -1]], np.int32),
+                        np.array([17, 9, 21]), 64, 4, 8),
+        "moe_a2a": (rng.integers(0, 8, size=64).astype(np.int32), 8, 16),
+        "ssm_scan": (2, 64, 16, 4),
     }
     failures = 0
     for name in kreg.names():
@@ -141,6 +161,12 @@ def _run_check() -> int:
         "simulate_serving_stream(b=2, plen=12, steps=6)",
         simulate_serving_stream(arch, batch=2, prompt_len=12,
                                 decode_steps=6, page_len=8), arch)
+
+    from repro.models.trace import model_step_trace, resolve_model_config
+    failures += _check_one(
+        "model_step_trace(llama3.2-1b smoke)",
+        model_step_trace(resolve_model_config("llama3.2-1b", smoke=True),
+                         arch, batch=2, prompt_len=12, block_ops=64), arch)
 
     failures += _check_engine(arch)
     return failures

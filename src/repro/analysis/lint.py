@@ -21,7 +21,13 @@ Runtime registry checks (cheap imports, no jax tracing):
 
   * **REPRO003 kernel-registry-completeness** — registered kernels missing
     the ``trace`` / ``blocks`` / ``symbolic`` entry points the unified
-    Trace pipeline and the conflict prover rely on.
+    Trace pipeline and the conflict prover rely on.  Covers every module
+    that self-registers kernels — the seven ``repro.kernels`` packages AND
+    the ``repro.models`` traffic lowerings (attn_decode / moe_a2a /
+    ssm_scan): the check imports the registry's full builtin set itself
+    rather than trusting whatever a caller happened to import first (the
+    pre-PR-8 gap: kernels registered outside ``src/repro/kernels/`` were
+    invisible to the lint until something imported them).
   * **REPRO004 arch-name-round-trip** — every registered architecture name
     (and every ``ArchSpace`` grid name, including the ``{B}B-offset-s{K}``
     shifted points) must parse back through the arch-name parser to the
@@ -155,9 +161,19 @@ def lint_paths(paths) -> list:
 def registry_findings() -> list:
     """Check the kernel and architecture registries for the contract the
     rest of the repo assumes (see module docstring)."""
+    import importlib
+
     findings = []
 
     from repro.kernels import registry as kreg
+    # Hold EVERY self-registering module to the contract — the kernel
+    # packages and the repro.models traffic lowerings alike.  Explicit
+    # imports (not just kreg.names()'s ensure hook) so the lint stays
+    # complete even if the registry's builtin list regresses.
+    for pkg in kreg._BUILTIN_PACKAGES:
+        importlib.import_module(f"repro.kernels.{pkg}")
+    for mod in set(kreg._BUILTIN_MODULES) | {"repro.models.trace"}:
+        importlib.import_module(mod)
     for name in kreg.names():
         k = kreg.get(name)
         for attr in ("trace", "blocks", "symbolic"):

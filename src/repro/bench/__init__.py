@@ -9,9 +9,10 @@ and workloads.py for the builders.
 """
 from repro.bench.runner import (TraceWorkload, Workload, run_cell, run_cells,
                                 sweep, verify_workload)
-from repro.bench.workloads import (fft_workload, scheduler_workload,
-                                   serving_workload, transpose_workload)
+from repro.bench.workloads import (fft_workload, model_workload,
+                                   scheduler_workload, serving_workload,
+                                   transpose_workload)
 
 __all__ = ["Workload", "TraceWorkload", "run_cell", "run_cells", "sweep",
            "verify_workload", "fft_workload", "transpose_workload",
-           "serving_workload", "scheduler_workload"]
+           "serving_workload", "scheduler_workload", "model_workload"]

@@ -128,6 +128,14 @@ _BUILTIN_PACKAGES = (
     "conflict_popcount", "fft_stage", "moe_dispatch",
 )
 
+#: Modules outside ``repro.kernels`` that also self-register kernels on
+#: import (whole-model traffic lowerings: attn_decode / moe_a2a / ssm_scan).
+#: Listed here so ``get``/``names`` — and the REPRO003 contract lint that
+#: iterates ``names()`` — see them without a manual import.
+_BUILTIN_MODULES = (
+    "repro.models.trace",
+)
+
 
 def register(kernel: Kernel) -> Kernel:
     """Register a fully-built Kernel; returns it (usable as a decorator on
@@ -155,6 +163,8 @@ def _ensure_builtins() -> None:
     import importlib
     for pkg in _BUILTIN_PACKAGES:
         importlib.import_module(f"repro.kernels.{pkg}")
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
 
 
 def get(name: str) -> Kernel:

@@ -2,7 +2,10 @@ from repro.models.transformer import (cache_specs, decode_step, forward,
                                       loss_fn, model_specs, prefill)
 from repro.models.params import (Leaf, count_params, init_tree, shape_tree,
                                  spec_tree)
+from repro.models.trace import (model_step_symbolic, model_step_trace,
+                                resolve_model_config)
 
 __all__ = ["cache_specs", "decode_step", "forward", "loss_fn", "model_specs",
            "prefill", "Leaf", "count_params", "init_tree", "shape_tree",
-           "spec_tree"]
+           "spec_tree", "model_step_trace", "model_step_symbolic",
+           "resolve_model_config"]

@@ -71,6 +71,12 @@ def test_validate_every_registered_kernel_stream():
                               .astype(np.int32),),
         "fft_stage": (np.zeros((1, 64), np.complex64),),
         "moe_dispatch": (rng.integers(0, 4, 64).astype(np.int32), 4, 32),
+        # model traffic lowerings (repro.models.trace)
+        "attn_decode": (np.array([[0, 3, 6, -1], [1, 4, -1, -1],
+                                  [2, 5, 7, -1]], np.int32),
+                        np.array([17, 9, 21]), 64, 4, 8),
+        "moe_a2a": (rng.integers(0, 8, 64).astype(np.int32), 8, 16),
+        "ssm_scan": (2, 64, 16, 4),
     }
     for name in kreg.names():
         k = kreg.get(name)

@@ -87,6 +87,50 @@ def test_registries_are_clean():
     assert registry_findings() == []
 
 
+def test_repro003_covers_model_registered_kernels():
+    """Regression for the pre-PR-8 gap: REPRO003 only saw kernels whose
+    packages live under ``src/repro/kernels/``; a contract-incomplete
+    kernel registered from ``repro.models`` (or anywhere else) slipped
+    through.  A probe kernel missing its ``symbolic`` entry point must now
+    be flagged regardless of the registering module."""
+    from repro.kernels import registry as kreg
+
+    def _probe(arch, x):
+        return x
+
+    kreg.register(kreg.Kernel(name="_lint_gap_probe", pallas=_probe,
+                              ref=_probe, trace=_probe, blocks=_probe,
+                              symbolic=None))
+    try:
+        fs = [f for f in registry_findings()
+              if f.path == "kernel:_lint_gap_probe"]
+        assert _codes(fs) == ["REPRO003"]
+        assert "symbolic" in fs[0].message
+    finally:
+        kreg._KERNELS.pop("_lint_gap_probe")
+    assert registry_findings() == []
+
+
+def test_repro003_reaches_model_trace_module_without_prior_import():
+    """The lint imports the registry's full builtin set itself — the
+    repro.models traffic kernels are checked (and thus held to the
+    trace/blocks/symbolic contract) even when nothing else imported them
+    first."""
+    import subprocess
+    import sys
+    code = (
+        "from repro.analysis.lint import registry_findings\n"
+        "registry_findings()\n"
+        "from repro.kernels import registry as kreg\n"
+        "assert {'attn_decode', 'moe_a2a', 'ssm_scan'} <= set(kreg._KERNELS)\n"
+    )
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True,
+                          env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin",
+                               "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr
+
+
 def test_run_all_clean_on_repo():
     assert run_all((str(SRC),)) == []
 

@@ -104,6 +104,12 @@ def test_every_registered_kernel_symbolic_cross_checks():
                               .astype(np.int32),),
         "fft_stage": (np.zeros((1, 256), np.complex64),),
         "moe_dispatch": (rng.integers(0, 8, 128).astype(np.int32), 8, 32),
+        # model traffic lowerings (repro.models.trace)
+        "attn_decode": (np.array([[0, 3, 6, -1], [1, 4, -1, -1],
+                                  [2, 5, 7, -1]], np.int32),
+                        np.array([17, 9, 21]), 64, 4, 8),
+        "moe_a2a": (rng.integers(0, 8, 64).astype(np.int32), 8, 16),
+        "ssm_scan": (2, 64, 16, 4),
     }
     a16 = A.get("16B")
     for name in kreg.names():

@@ -17,9 +17,11 @@ from repro.core.memsim import (LANES, PAPER_MEMORIES, Memory, banked,
 
 PAPER_NAMES = ("4R-1W", "4R-2W", "4R-1W-VB", "16B", "16B-offset",
                "8B", "8B-offset", "4B", "4B-offset")
+#: the paper's seven kernel packages + the three model traffic lowerings
+#: registered from repro.models.trace (attn/moe/ssm decode-step streams)
 KERNEL_NAMES = ("banked_gather", "banked_scatter", "banked_transpose",
                 "carry_arbiter", "conflict_popcount", "fft_stage",
-                "moe_dispatch")
+                "moe_dispatch", "attn_decode", "moe_a2a", "ssm_scan")
 
 
 # ------------------------------------------------------------ registry --
@@ -55,7 +57,7 @@ def test_register_new_architecture():
         arch._REGISTRY.pop("test-custom-64")
 
 
-def test_kernel_registry_resolves_all_seven():
+def test_kernel_registry_resolves_all_builtins():
     assert set(kernels.names()) == set(KERNEL_NAMES)
     for name in KERNEL_NAMES:
         k = kernels.get(name)

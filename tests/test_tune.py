@@ -156,6 +156,33 @@ def test_area_time_objective_rules_out_over_capacity_multiport():
     assert ranked[0].arch.endswith("B") or "-" in ranked[0].arch
 
 
+def test_model_workload_objectives_run_and_are_deterministic():
+    """ISSUE 8 satellite: both serving objectives run on a whole-model
+    decode step — ``us_per_token`` (the step's meta carries n_tokens) and
+    ``area_time`` — and the full ranking is deterministic across two
+    seeded runs (the allocator and MoE routing replay from the seed)."""
+    from repro.bench import model_workload
+
+    def ranked(objective, **kw):
+        return tune.search(workload=model_workload("llama3_2_1b", seed=0),
+                           space=PAPER_SPACE, objective=objective, **kw)
+
+    per_token = ranked("us_per_token")
+    assert [r.arch for r in per_token] == \
+        [r.arch for r in ranked("us_per_token")]
+    # one token per sequence per step: objective = time_us / batch(=4)
+    assert per_token[0].objective == pytest.approx(
+        per_token[0].time_us / 4)
+    assert per_token[0].arch == "16B"          # the pinned whole-step winner
+
+    area = ranked("area_time", capacity_kb=224.0)
+    assert [r.arch for r in area] == \
+        [r.arch for r in ranked("area_time", capacity_kb=224.0)]
+    scores = {r.arch: r.objective for r in area}
+    assert scores["4R-1W"] == float("inf")     # 4x replication over budget
+    assert area[0].objective < float("inf")
+
+
 def test_search_api_validation():
     with pytest.raises(ValueError):
         tune.search(workload=transpose_workload(32), strategy="anneal")
