@@ -32,6 +32,16 @@ additionally gates (exit non-zero on failure):
 Scheduler results are appended to ``BENCH_cost.json`` under the
 ``"scheduler"`` key (the cost-engine rows written by cost_bench.py are
 left untouched).
+
+``--chaos`` runs the fault-injection section INSTEAD (the CI chaos step:
+``--chaos --smoke --check``): the pinned small day replayed under a seeded
+``repro.runtime.FaultPlan`` — a bank loss, an ECC page corruption and a
+transient decode fault — priced healthy, faulted, and faulted on the
+degraded ``!d`` architecture variant.  Gates: the faulted stream passes
+``contracts.validate``, recovery traffic costs strictly more than the
+healthy day, the surviving-bank remap prices the same traffic at least as
+high as the healthy arch, and all three cycle counts match their pins.
+Results land in ``BENCH_cost.json`` under the ``"faults"`` key.
 """
 from __future__ import annotations
 
@@ -76,6 +86,12 @@ CHECK_CYCLES = {"16B": 2800, "4R-2W": 128}
 #: --check pins for the streamed serving-day gate
 DAY_REQUESTS = 1000
 DAY_PEAK_HEADROOM = 2.0   # dense matrix must be ≥ 2x the streamed peak
+
+#: --chaos pins: CHECK_TRAFFIC replayed under the seeded fault plan below
+#: on 16B-xor, priced healthy / faulted / faulted-on-the-degraded-variant
+CHAOS_ARCH = "16B-xor"
+CHAOS_DEAD_BANKS = (1,)
+CHAOS_CYCLES = {"healthy": 2800, "faulted": 4660, "faulted_degraded": 4668}
 
 
 def workloads(smoke: bool = False):
@@ -222,6 +238,91 @@ def check_streamed_day() -> dict:
             "ok": bool(dense >= DAY_PEAK_HEADROOM * peak)}
 
 
+def chaos_plan():
+    """The seeded chaos day (one of every recoverable fault kind; the
+    same timeline tests/test_faults.py pins live-vs-sim on)."""
+    from repro.runtime import FaultEvent, FaultPlan
+    return FaultPlan((
+        FaultEvent(tick=3, kind="bank_offline", bank=CHAOS_DEAD_BANKS[0]),
+        FaultEvent(tick=5, kind="page_corrupt", rid=0, page_idx=0),
+        FaultEvent(tick=6, kind="decode_transient", failures=2),
+    ))
+
+
+def chaos_section() -> tuple[dict, list]:
+    """The --chaos gate: replay the pinned small day under the seeded
+    fault plan and price the recovery traffic on the healthy arch AND its
+    degraded surviving-bank variant.  Returns (row, failure messages)."""
+    from repro.analysis import validate
+    from repro.core import arch as A
+    from repro.core.cost_engine import cost_many
+    from repro.serving.scheduler import Request, simulate_scheduler_stream
+    plan = chaos_plan()
+    reqs = [Request(rid=i, arrival=a, prompt_len=p, max_new_tokens=m)
+            for i, (a, p, m) in enumerate(CHECK_TRAFFIC)]
+    base = A.get(CHAOS_ARCH)
+    deg = base.degrade(CHAOS_DEAD_BANKS)
+    kw = dict(n_lanes=4, max_seq=32, page_len=PAGE_LEN,
+              n_kv_layers=N_KV_LAYERS)
+    healthy = simulate_scheduler_stream(base, reqs, **kw)
+    faulted = simulate_scheduler_stream(base, reqs, fault_plan=plan, **kw)
+    rep1 = validate(faulted, arch=CHAOS_ARCH, block_ops=64)
+    rep2 = validate(faulted, arch=CHAOS_ARCH, block_ops=64)  # re-iterable
+    healthy_c = int(cost_many([base], healthy)[0].total_cycles)
+    f_base, f_deg = (int(c.total_cycles)
+                     for c in cost_many([base, deg], faulted))
+    cycles = {"healthy": healthy_c, "faulted": f_base,
+              "faulted_degraded": f_deg}
+    failures = []
+    if not (rep1.ok and rep2.ok and rep1.n_ops == rep2.n_ops):
+        failures.append(
+            f"faulted day fails the trace contract or is not re-iterable "
+            f"({rep1.violations or rep2.violations})")
+    if not f_base > healthy_c:
+        failures.append(
+            f"faulted day ({f_base} cycles) should cost strictly more than "
+            f"the healthy day ({healthy_c}): where did the migration and "
+            f"replay traffic go?")
+    if not f_deg >= f_base:
+        failures.append(
+            f"degraded variant {deg.name} prices the faulted day at "
+            f"{f_deg} < healthy arch's {f_base} — the surviving-bank remap "
+            f"can only add conflicts")
+    if cycles != CHAOS_CYCLES:
+        failures.append(f"chaos cycles {cycles} != pinned {CHAOS_CYCLES}")
+    row = {"workload": "chaos_day", "arch": CHAOS_ARCH,
+           "degraded_arch": deg.name, "plan": plan.counts(),
+           "validate_ok": bool(rep1.ok and rep2.ok),
+           "n_ops": int(rep1.n_ops), "cycles": cycles,
+           "ok": not failures}
+    return row, failures
+
+
+def chaos_main(argv) -> None:
+    row, failures = chaos_section()
+    print(f"chaos_{row['arch']},cycles={row['cycles']['healthy']}"
+          f"->{row['cycles']['faulted']}"
+          f" (degraded {row['degraded_arch']}:"
+          f" {row['cycles']['faulted_degraded']})"
+          f",validate_ok={row['validate_ok']},n_ops={row['n_ops']}")
+    payload = {}
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            payload = json.load(f)
+    payload["faults"] = row
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# appended faults section to {OUT_JSON}")
+    if "--check" in argv:
+        if failures:
+            for msg in failures:
+                print(f"# CHAOS CHECK FAILED: {msg}", file=sys.stderr)
+            raise SystemExit(1)
+        print("# chaos check OK: faulted day validates, recovery traffic "
+              "priced, degraded-variant cycles pinned")
+
+
 def check(sched: list, flips: dict) -> tuple[list, list]:
     """CI gate (--smoke --check): returns (check_rows, failure messages)."""
     failures = []
@@ -247,6 +348,8 @@ def check(sched: list, flips: dict) -> tuple[list, list]:
 
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
+    if "--chaos" in argv:
+        return chaos_main(argv)
     smoke = "--smoke" in argv
     out = rows(smoke=smoke)
     sched = sched_rows(smoke=smoke)

@@ -16,6 +16,13 @@ Static (AST) checks over library code:
     every pre-guard call site that priced a second pass priced 0 cycles.
     Pass the generator FUNCTION (a zero-arg callable) for a re-iterable
     stream.
+  * **REPRO005 swallowed-exception** — a bare ``except:`` clause, or an
+    ``except`` whose entire body is ``pass``/``...``: in a fault-tolerant
+    serving stack (``repro.runtime.faults``) a silently eaten error turns a
+    recoverable fault into wrong tokens.  Catch a concrete exception type
+    and handle or re-raise it; a deliberate suppression (e.g. best-effort
+    cleanup) carries a ``# lint: allow-silent-except`` waiver on the
+    ``except`` line or the line above.
 
 Runtime registry checks (cheap imports, no jax tracing):
 
@@ -48,6 +55,7 @@ __all__ = ["Finding", "lint_file", "lint_paths", "registry_findings",
            "run_all"]
 
 _WAIVER = "lint: allow-materialize"
+_WAIVER_SILENT = "lint: allow-silent-except"
 
 
 @dataclass(frozen=True)
@@ -86,14 +94,28 @@ def _generator_names(tree: ast.AST) -> set:
     return out
 
 
-def _waived(lines: list, first: int, last: int) -> bool:
-    """True when any 1-indexed line of the call span — or the line above
-    it — carries the waiver (multi-line calls put ``.materialize()`` lines
-    below the node's ``lineno``)."""
+def _waived(lines: list, first: int, last: int,
+            token: str = _WAIVER) -> bool:
+    """True when any 1-indexed line of the node span — or the line above
+    it — carries the waiver ``token`` (multi-line calls put
+    ``.materialize()`` lines below the node's ``lineno``)."""
     for ln in range(first - 1, last + 1):
-        if 1 <= ln <= len(lines) and _WAIVER in lines[ln - 1]:
+        if 1 <= ln <= len(lines) and token in lines[ln - 1]:
             return True
     return False
+
+
+def _silent_body(body: list) -> bool:
+    """True when an except body does nothing: only ``pass`` / ``...``."""
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant)
+                and stmt.value.value is Ellipsis):
+            continue
+        return False
+    return True
 
 
 def lint_file(path, source: str | None = None) -> list:
@@ -109,6 +131,25 @@ def lint_file(path, source: str | None = None) -> list:
     gens = _generator_names(tree)
     findings = []
     for node in ast.walk(tree):
+        # REPRO005: bare except / except body that swallows the error
+        if isinstance(node, ast.ExceptHandler):
+            waived = _waived(lines, node.lineno,
+                             node.end_lineno or node.lineno, _WAIVER_SILENT)
+            if node.type is None and not waived:
+                findings.append(Finding(
+                    "REPRO005", str(p), node.lineno,
+                    "bare `except:` — catches SystemExit/KeyboardInterrupt "
+                    "and hides real faults from the recovery layer; catch "
+                    "a concrete exception type, or waive a deliberate "
+                    f"suppression with `# {_WAIVER_SILENT}`"))
+            elif _silent_body(node.body) and not waived:
+                findings.append(Finding(
+                    "REPRO005", str(p), node.lineno,
+                    "exception swallowed (except body is only pass/...) — "
+                    "a silently eaten error turns a recoverable fault into "
+                    "wrong results; handle or re-raise it, or waive a "
+                    f"deliberate suppression with `# {_WAIVER_SILENT}`"))
+            continue
         if not isinstance(node, ast.Call):
             continue
         f = node.func

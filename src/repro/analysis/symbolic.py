@@ -336,6 +336,16 @@ def prove(arch, symbolic: SymbolicTrace) -> ArchProof:
     """
     from repro.core import arch as _arch
     a = _arch.resolve(arch)
+    if getattr(a.spec, "dead_banks", ()):
+        # Degraded ``!d`` variants remap conflict groups through a surviving-
+        # bank table AFTER the bank formula — the residue-class argument the
+        # prover rests on (bank as a pure function of address bits) no longer
+        # holds, so there is no symbolic story to tell.  Price degraded
+        # layouts through the engine (cost_many / arch.cost) instead.
+        raise NotImplementedError(
+            f"prove() does not support degraded architectures ({a.name}): "
+            f"the surviving-bank remap breaks the residue-class bank model; "
+            f"use cost_many / arch.cost for degraded pricing")
     read, write, (r_ovh, w_ovh) = _spec_paths(a.spec)
 
     proofs = []

@@ -1,5 +1,5 @@
-from repro.checkpoint.checkpoint import (Checkpointer, latest_step,
+from repro.checkpoint.checkpoint import (Checkpointer, latest_step, load_aux,
                                          restore_checkpoint, save_checkpoint)
 
-__all__ = ["Checkpointer", "latest_step", "restore_checkpoint",
+__all__ = ["Checkpointer", "latest_step", "load_aux", "restore_checkpoint",
            "save_checkpoint"]

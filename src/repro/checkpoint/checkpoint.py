@@ -33,8 +33,15 @@ def _flatten_with_paths(tree):
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 
-def save_checkpoint(directory: str, step: int, state, keep: int = 3) -> str:
-    """Synchronous sharded save with atomic rename.  Returns final path."""
+def save_checkpoint(directory: str, step: int, state, keep: int = 3,
+                    aux: Optional[dict] = None) -> str:
+    """Synchronous sharded save with atomic rename.  Returns final path.
+
+    ``aux`` is an optional JSON-serializable sidecar (``aux.json`` inside
+    the same atomic step directory) for non-array state that travels with
+    the arrays — e.g. the serving scheduler's ``state_dict()`` next to its
+    KV pools.  Read it back with ``load_aux``.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=directory)
@@ -52,6 +59,9 @@ def save_checkpoint(directory: str, step: int, state, keep: int = 3) -> str:
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        if aux is not None:
+            with open(os.path.join(tmp, "aux.json"), "w") as f:
+                json.dump(aux, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -60,6 +70,16 @@ def save_checkpoint(directory: str, step: int, state, keep: int = 3) -> str:
         raise
     _gc(directory, keep)
     return final
+
+
+def load_aux(directory: str, step: int) -> Optional[dict]:
+    """The ``aux`` sidecar saved with ``save_checkpoint`` (None if the
+    checkpoint has none)."""
+    path = os.path.join(directory, f"step_{step:08d}", "aux.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -80,18 +100,44 @@ def restore_checkpoint(directory: str, step: int, like,
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
-    assert len(leaves_like) == len(manifest["paths"]), \
-        f"checkpoint has {len(manifest['paths'])} leaves, " \
-        f"target {len(leaves_like)}"
+    if len(leaves_like) != len(manifest["paths"]):
+        raise ValueError(
+            f"checkpoint step {step} in {directory} has "
+            f"{len(manifest['paths'])} leaves but the restore template has "
+            f"{len(leaves_like)}; the pytree structures disagree")
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(leaves_like))
     out = []
     for i, (ref, shd) in enumerate(zip(leaves_like, shard_leaves)):
+        name = manifest["paths"][i]
         arr = data[f"leaf_{i}"]
-        want = tuple(np.shape(ref))
-        assert tuple(arr.shape) == want, \
-            f"leaf {manifest['paths'][i]}: ckpt {arr.shape} != target {want}"
-        arr = arr.astype(ref.dtype)
+        saved_shape = tuple(manifest["shapes"][i])
+        saved_dtype = np.dtype(manifest["dtypes"][i])
+        if (arr.dtype != saved_dtype and arr.dtype.kind == "V"
+                and arr.dtype.itemsize == saved_dtype.itemsize):
+            # npz round-trips extension dtypes (e.g. ml_dtypes bfloat16)
+            # as raw void bytes; the manifest names the real dtype
+            arr = arr.view(saved_dtype)
+        if tuple(arr.shape) != saved_shape:
+            raise ValueError(
+                f"leaf {name}: arrays.npz holds shape {tuple(arr.shape)} "
+                f"but the manifest recorded {saved_shape} — the checkpoint "
+                f"is corrupt")
+        want_shape = tuple(np.shape(ref))
+        if saved_shape != want_shape:
+            raise ValueError(
+                f"leaf {name}: checkpoint shape {saved_shape} != template "
+                f"shape {want_shape} — restoring into a different model/"
+                f"config than the one checkpointed")
+        ref_dtype = getattr(ref, "dtype", None)
+        want_dtype = (np.dtype(ref_dtype) if ref_dtype is not None
+                      else np.asarray(ref).dtype)
+        if saved_dtype != want_dtype:
+            raise ValueError(
+                f"leaf {name}: checkpoint dtype {saved_dtype} != template "
+                f"dtype {want_dtype} — restoring into a different model/"
+                f"config than the one checkpointed")
+        arr = arr.astype(want_dtype)   # normalize npz round-trip views
         out.append(jax.device_put(arr, shd) if shd is not None
                    else jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)

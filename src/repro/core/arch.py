@@ -361,6 +361,94 @@ class BankedMemory(MemoryArchitecture):
         return (ctl.write_overhead(self.n_banks) if is_write
                 else ctl.read_overhead(self.n_banks))
 
+    def degrade(self, dead_banks) -> "DegradedBankedMemory":
+        """This memory with ``dead_banks`` offline (fault-recovery pricing:
+        ``repro.runtime.faults`` bank-offline events lower their degraded
+        layout through the returned variant)."""
+        return DegradedBankedMemory(self.spec, dead_banks)
+
+
+def surviving_bank_remap(n_banks: int, dead_banks) -> tuple:
+    """The degraded-mode bank remap: each dead bank's requests are served
+    by its next surviving neighbor (wrap-around scan — the deterministic
+    spare-mux an FPGA partial-reconfiguration flow would wire); surviving
+    banks map to themselves.  Returns a length-``n_banks`` tuple."""
+    dead = set(int(d) for d in dead_banks)
+    if not all(0 <= d < n_banks for d in dead):
+        raise ValueError(f"dead banks {sorted(dead)} out of range for "
+                         f"{n_banks} banks")
+    if len(dead) >= n_banks:
+        raise ValueError(f"cannot offline all {n_banks} banks")
+    out = []
+    for b in range(n_banks):
+        t = b
+        while t in dead:
+            t = (t + 1) % n_banks
+        out.append(t)
+    return tuple(out)
+
+
+class DegradedBankedMemory(BankedMemory):
+    """A ``BankedMemory`` with one or more banks offline.
+
+    The logical↔physical row mapping (``layout``) is the base memory's —
+    page ids and kernel index maps are unchanged — but the *conflict model*
+    remaps every request on a dead bank to its surviving neighbor
+    (``surviving_bank_remap``), so traffic that used to spread over B banks
+    arbitrates over the survivors.  Named ``{base}!d{b0}+{b1}...`` (e.g.
+    ``16B-xor!d3``); parseable via ``get``/``resolve`` but never registered
+    (degraded variants are run-state, not paper comparison points).  The
+    symbolic conflict prover does not model remaps and raises on degraded
+    specs (``repro.analysis.symbolic.prove``).
+    """
+
+    def __init__(self, base_spec: MemSpec, dead_banks=None, *,
+                 spec: MemSpec | None = None):
+        if spec is None:
+            if not base_spec.is_banked:
+                raise ValueError(
+                    f"{base_spec.name} is not banked; only banked memories "
+                    f"degrade (multi-port replicas have no banks to lose)")
+            if base_spec.dead_banks:
+                dead = tuple(base_spec.dead_banks) + tuple(dead_banks or ())
+                base_spec = _base_of(base_spec)
+            else:
+                dead = tuple(dead_banks or ())
+            dead = tuple(sorted(set(int(d) for d in dead)))
+            surviving_bank_remap(base_spec.n_banks, dead)  # validates
+            if not dead:
+                raise ValueError("degraded memory needs >= 1 dead bank")
+            from dataclasses import replace
+            spec = replace(
+                base_spec, dead_banks=dead,
+                name=f"{base_spec.name}!d" + "+".join(str(d) for d in dead))
+        assert spec.dead_banks, spec
+        super().__init__(spec=spec)
+
+    @property
+    def dead_banks(self) -> tuple:
+        return self.spec.dead_banks
+
+    @property
+    def base(self) -> "BankedMemory":
+        """The healthy memory this variant degrades."""
+        return from_spec(_base_of(self.spec))  # type: ignore[return-value]
+
+    def bank_remap(self) -> tuple:
+        return surviving_bank_remap(self.n_banks, self.dead_banks)
+
+    def banks_of(self, addrs: Array) -> Array:
+        remap = jnp.asarray(self.bank_remap(), jnp.int32)
+        return remap[super().banks_of(addrs)]
+
+
+def _base_of(spec: MemSpec) -> MemSpec:
+    """A degraded spec's healthy base (identity for healthy specs)."""
+    if not spec.dead_banks:
+        return spec
+    return _banked_spec(spec.n_banks, spec.mapping, spec.map_shift,
+                        spec.broadcast)
+
 
 class MultiPortMemory(MemoryArchitecture):
     """nR-mW replicated multi-port memory: deterministic ceil(active/ports)
@@ -410,6 +498,8 @@ def from_spec(spec: MemSpec) -> MemoryArchitecture:
     """Wrap a frozen MemSpec in its architecture class (cached: specs are
     value objects, architectures are stateless)."""
     if spec.is_banked:
+        if spec.dead_banks:
+            return DegradedBankedMemory(spec, spec=spec)
         return BankedMemory(spec=spec)
     return MultiPortMemory(spec=spec)
 
@@ -434,7 +524,23 @@ def register(arch: MemoryArchitecture,
     return arch
 
 
+_DEGRADED_NAME = re.compile(r"^(?P<base>.+)!d(?P<dead>\d+(?:\+\d+)*)$")
+
+
 def _parse(name: str) -> MemoryArchitecture | None:
+    m = _DEGRADED_NAME.match(name)
+    if m:
+        base = _parse(m.group("base"))
+        if base is None or not isinstance(base, BankedMemory) or (
+                isinstance(base, DegradedBankedMemory)):
+            return None
+        dead = tuple(int(d) for d in m.group("dead").split("+"))
+        if any(d >= base.n_banks for d in dead) or len(set(dead)) >= (
+                base.n_banks):
+            return None
+        if list(dead) != sorted(set(dead)):
+            return None                 # canonical order so names round-trip
+        return DegradedBankedMemory(base.spec, dead)
     m = _BANKED_NAME.match(name)
     if m:
         banks = int(m.group("banks"))

@@ -113,6 +113,13 @@ class ArchTable:
     ports]; ``overheads`` is (n_archs, 2) per-instruction controller
     overheads (read, write; twiddle loads are reads); ``need_uniq`` records
     whether any read path coalesces same-address requests.
+
+    ``remaps`` is (n_archs, 2, W) int32 — the degraded-mode bank remap
+    (``repro.core.arch.surviving_bank_remap``) applied to the generic
+    formula's bank output, identity-padded to the lattice's widest bank
+    count; ``need_remap`` is False for all-healthy lattices, and the fused
+    kernel then compiles exactly the pre-degraded code (healthy costing is
+    bit-equal and pays nothing for the feature).
     """
 
     def __init__(self, specs: tuple):
@@ -125,6 +132,20 @@ class ArchTable:
         self.params = np.asarray(rows, np.int32).reshape(len(specs), 2, 7)
         self.overheads = np.asarray(ovhs, np.int64).reshape(len(specs), 2)
         self.need_uniq = bool(self.params[:, 0, _F_UNIQ].any())
+        width = max(1, int(self.params[:, :, _F_BMASK].max()) + 1)
+        self.remaps = np.tile(np.arange(width, dtype=np.int32),
+                              (len(specs), 2, 1))
+        self.need_remap = False
+        for i, s in enumerate(specs):
+            dead = getattr(s, "dead_banks", ())
+            if not dead:
+                continue
+            from repro.core.arch import surviving_bank_remap
+            remap = surviving_bank_remap(s.n_banks, dead)
+            # both paths share the data banks (the -VB pseudo-bank write
+            # path never coexists with a banked spec, so this is total)
+            self.remaps[i, :, :s.n_banks] = np.asarray(remap, np.int32)
+            self.need_remap = True
 
     def __len__(self) -> int:
         return len(self.specs)
@@ -146,8 +167,9 @@ def lower_archs(archs) -> ArchTable:
 # The fused block kernel
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("need_uniq",))
-def _block_kind_cycles(params, addrs, mask, kinds, *, need_uniq: bool):
+@functools.partial(jax.jit, static_argnames=("need_uniq", "need_remap"))
+def _block_kind_cycles(params, remaps, addrs, mask, kinds, *,
+                       need_uniq: bool, need_remap: bool):
     """One block, every architecture: (n_archs, 3) per-kind cycle sums.
 
     addrs (n_ops, LANES) int32, mask (n_ops, LANES) bool, kinds (n_ops,)
@@ -159,18 +181,27 @@ def _block_kind_cycles(params, addrs, mask, kinds, *, need_uniq: bool):
     equals the max over banks — with LANES² (256) int8 cells per op
     independent of bank count, which XLA:CPU vectorizes ~40× better than a
     (lanes × banks) one-hot reduction.
+
+    ``need_remap`` (static) routes bank outputs through the per-arch
+    degraded remap rows (``ArchTable.remaps``); all-healthy lattices
+    compile without the lookup and cost bit-identically to before the
+    degraded variants existed.
     """
     is_write = kinds == KIND_STORE
     active = mask.sum(axis=-1, dtype=jnp.int32)                  # (n_ops,)
     uniq = (first_occurrence(addrs, mask).astype(bool)
             if need_uniq else mask)
 
-    def one_arch(p):                                             # p (2, 7)
+    def one_arch(p, rm):                                 # p (2, 7), rm (2, W)
         pr = jnp.where(is_write[:, None], p[1], p[0])            # (n_ops, 7)
         bank = ((((addrs >> pr[:, _F_SH, None])
                   ^ (addrs >> pr[:, _F_XSH, None]))
                  + (addrs >> pr[:, _F_ASH, None]))
                 & pr[:, _F_BMASK, None])                         # (n_ops, L)
+        if need_remap:
+            rm_rows = jnp.where(is_write[:, None], rm[1][None, :],
+                                rm[0][None, :])                  # (n_ops, W)
+            bank = jnp.take_along_axis(rm_rows, bank, axis=1)
         eff = mask & jnp.where(pr[:, _F_UNIQ, None].astype(bool), uniq, True)
         eq = (bank[:, :, None] == bank[:, None, :]) & eff[:, None, :]
         cnt = eq.sum(axis=-1, dtype=jnp.int8)                    # (n_ops, L)
@@ -178,7 +209,7 @@ def _block_kind_cycles(params, addrs, mask, kinds, *, need_uniq: bool):
         ported = (active + pr[:, _F_PORTS] - 1) // pr[:, _F_PORTS]
         return jnp.where(pr[:, _F_BANKED].astype(bool), banked, ported)
 
-    cyc = jax.vmap(one_arch)(params)                             # (A, n_ops)
+    cyc = jax.vmap(one_arch)(params, remaps)                     # (A, n_ops)
     kind_onehot = (kinds[:, None]
                    == jnp.asarray(_KINDS, jnp.int32)).astype(jnp.int32)
     return cyc @ kind_onehot                                     # (A, 3)
@@ -280,6 +311,7 @@ def cost_many(archs, trace, block_ops: int | None = None,
         return []
     table = _lowered(tuple(a.spec for a in arch_objs))
     params = jnp.asarray(table.params)
+    remaps = jnp.asarray(table.remaps)
 
     partials: list = []    # per-batch (A, 3) int32 device arrays; summed in
     # int64 on the host (folded every _FOLD_EVERY batches for dispatch-queue
@@ -313,8 +345,9 @@ def cost_many(archs, trace, block_ops: int | None = None,
         pending_ops = 0
         addrs, mask, kinds = _pad_ops(addrs, mask, kinds)
         partials.append(_block_kind_cycles(
-            params, jnp.asarray(addrs), jnp.asarray(mask),
-            jnp.asarray(kinds), need_uniq=table.need_uniq))
+            params, remaps, jnp.asarray(addrs), jnp.asarray(mask),
+            jnp.asarray(kinds), need_uniq=table.need_uniq,
+            need_remap=table.need_remap))
         if len(partials) >= _FOLD_EVERY:
             totals = _fold(totals, partials, len(arch_objs))
 

@@ -48,6 +48,12 @@ class MemSpec:
     write_ports: int = 1
     vb_write_banks: int = 0   # 4R-1W-VB: writes arbitrated over N pseudo-banks
     fmax_mhz: float = FMAX_DEFAULT_MHZ
+    #: offline banks of a degraded banked memory (``repro.core.arch``'s
+    #: ``!d`` variants): requests whose bank map lands on a dead bank are
+    #: served by its next surviving neighbor (wrap-around remap).  Always
+    #: ``()`` for healthy memories — the cost-engine lowering compiles the
+    #: remap path only when a spec carries dead banks.
+    dead_banks: tuple = ()
 
     @property
     def is_banked(self) -> bool:

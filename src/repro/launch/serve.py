@@ -17,6 +17,15 @@ trace the same way.
 
   python -m repro.launch.serve --arch llama3.2-1b --schedule \
       --n-requests 8 --arrival-rate 1.5 --context-dist mixed --cost
+
+--fault-bank injects a seeded bank-loss fault into the scheduled day
+(docs/ROBUSTNESS.md): the bank goes offline at --fault-tick, live pages
+migrate through the banked kernels, and the run finishes degraded — the
+summary reports the fault counters and, with --cost, prices the recorded
+trace on the degraded ``!d`` architecture variant next to the healthy one.
+
+  python -m repro.launch.serve --arch llama3.2-1b --schedule \
+      --n-requests 8 --fault-bank 1 --fault-tick 4 --cost
 """
 from __future__ import annotations
 
@@ -73,7 +82,13 @@ def run_schedule(args, engine, cfg):
         args.n_requests, arrival_rate=args.arrival_rate,
         context_dist=args.context_dist, max_seq=engine.max_seq,
         seed=args.seed, vocab_size=cfg.vocab_size)
-    res = engine.run_scheduler(reqs, policy=args.policy)
+    plan = None
+    if args.fault_bank is not None:
+        from repro.runtime import FaultEvent, FaultPlan
+        plan = FaultPlan((FaultEvent(tick=args.fault_tick,
+                                     kind="bank_offline",
+                                     bank=args.fault_bank),))
+    res = engine.run_scheduler(reqs, policy=args.policy, fault_plan=plan)
     for r in reqs:
         out = res.outputs[r.rid]
         print(f"req{r.rid} (t={r.arrival} prompt={r.prompt_len} "
@@ -83,11 +98,21 @@ def run_schedule(args, engine, cfg):
           f"lane occupancy {s['lane_occupancy']:.2f}, bank occupancy skew "
           f"mad={s['bank_mad']:.2f} max/min={s['bank_max_min_ratio']:.2f} "
           f"(policy={args.policy})")
+    f = s["faults"]
+    if f["degraded"]:
+        print(f"faults: bank(s) {f['dead_banks']} lost at tick "
+              f"{args.fault_tick}, {f['migrated_pages']} live pages "
+              f"migrated; day finished degraded (every request completed)")
     if args.cost:
         trace = (engine.scheduler_stream()
                  .materialize())  # lint: allow-materialize — tiny CLI day
         _cost_table(trace, f"\nscheduler KV traffic ({engine.n_kv_layers} "
                            f"KV layers): {trace.n_ops} ops")
+        if f["degraded"]:
+            deg = engine.mem_arch.degrade(tuple(f["dead_banks"]))
+            c = deg.cost(trace)
+            print(f"{deg.name:<12}{c.total_cycles:>10}"
+                  f"{c.time_us(deg.fmax_mhz):>9.2f}  (degraded survivors)")
 
 
 def main():
@@ -118,8 +143,17 @@ def main():
     ap.add_argument("--policy", default="seq-skew",
                     help="preferred-bank allocation policy "
                          "(kvcache.ALLOC_POLICIES: paper | seq-skew)")
+    ap.add_argument("--fault-bank", type=int, default=None,
+                    help="inject a bank-offline fault into the scheduled "
+                         "day: this pool bank dies at --fault-tick "
+                         "(--schedule only; docs/ROBUSTNESS.md)")
+    ap.add_argument("--fault-tick", type=int, default=4,
+                    help="scheduler tick the --fault-bank loss fires at")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.fault_bank is not None and not args.schedule:
+        ap.error("--fault-bank needs --schedule (fault plans run on the "
+                 "continuous-batching scheduler)")
     if args.cost and args.kv_mode != "paged":
         ap.error("--cost needs --kv-mode paged (dense mode records no "
                  "serving traces)")

@@ -1,6 +1,9 @@
 from repro.runtime.fault_tolerance import (PreemptionGuard, StepWatchdog,
                                            retry_step)
+from repro.runtime.faults import (FAULT_KINDS, FaultEvent, FaultPlan,
+                                  TransientFault)
 from repro.runtime.elastic import elastic_restore, make_current_mesh
 
 __all__ = ["PreemptionGuard", "StepWatchdog", "retry_step",
+           "FAULT_KINDS", "FaultEvent", "FaultPlan", "TransientFault",
            "elastic_restore", "make_current_mesh"]

@@ -12,6 +12,7 @@
 from __future__ import annotations
 
 import logging
+import random
 import signal
 import statistics
 import time
@@ -73,14 +74,37 @@ class StepWatchdog:
 
 
 def retry_step(fn: Callable, *args, retries: int = 2, backoff: float = 0.1,
-               retry_on=(RuntimeError,), **kwargs):
-    """Run fn with bounded retry; re-raises after `retries` failures."""
+               retry_on=(RuntimeError,), jitter: float = 0.0,
+               seed: int = 0, max_elapsed: float | None = None,
+               _sleep: Callable[[float], None] = time.sleep,
+               _clock: Callable[[], float] = time.monotonic, **kwargs):
+    """Run fn with bounded retry; re-raises after ``retries`` failures.
+
+    Backoff before retry ``attempt`` (0-indexed) is ``backoff * 2**attempt``
+    scaled by a *deterministic* jitter factor in ``[1, 1 + jitter]`` drawn
+    from ``random.Random(seed)`` — thundering-herd decorrelation without
+    giving up reproducible runs (two calls with the same seed sleep the
+    same schedule).  ``max_elapsed`` caps the total time budget: once the
+    elapsed time plus the next sleep would exceed it, the last failure is
+    re-raised immediately even if retry attempts remain.  ``_sleep`` /
+    ``_clock`` are injectable for tests.
+    """
+    rng = random.Random(seed)
+    t0 = _clock()
     for attempt in range(retries + 1):
         try:
             return fn(*args, **kwargs)
         except retry_on as e:
             if attempt == retries:
                 raise
-            log.warning("step failed (%s); retry %d/%d", e, attempt + 1,
-                        retries)
-            time.sleep(backoff * (2 ** attempt))
+            delay = backoff * (2 ** attempt)
+            if jitter:
+                delay *= 1.0 + jitter * rng.random()
+            if (max_elapsed is not None
+                    and (_clock() - t0) + delay > max_elapsed):
+                log.warning("step failed (%s); retry budget %.3fs exhausted "
+                            "after %d attempts", e, max_elapsed, attempt + 1)
+                raise
+            log.warning("step failed (%s); retry %d/%d in %.3fs", e,
+                        attempt + 1, retries, delay)
+            _sleep(delay)

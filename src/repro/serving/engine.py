@@ -51,10 +51,15 @@ class SchedulerRunResult:
     """One continuous-batching run: per-request generated ids (rid-keyed;
     a request's array has exactly ``max_new_tokens`` entries), the
     scheduler's run statistics (makespan, lane occupancy, bank-occupancy
-    skew), and the tick count."""
+    skew, fault counters), and the tick count.  ``preempted`` marks a run
+    stopped mid-day by a preemption event (or ``PreemptionGuard``); its
+    ``checkpoint`` path resumes via ``run_scheduler(resume_from=...)``
+    with tokens identical to an uninterrupted run."""
     outputs: dict[int, np.ndarray]
     stats: dict
     ticks: int
+    preempted: bool = False
+    checkpoint: str | None = None
 
 
 class ServeEngine:
@@ -367,8 +372,66 @@ class ServeEngine:
                               "v": write(pools[key]["v"], bc["v"][sb])}
         return pools, first
 
-    def run_scheduler(self, requests, policy="seq-skew",
-                      scheduler=None) -> SchedulerRunResult:
+    def _migrate_pages(self, pools, old_ids, new_ids):
+        """Evacuate a dying bank's live pages: gather each page's row from
+        its old id and scatter it to the freshly allocated surviving-bank
+        id, in every layer's K and V pool.  Data is preserved — the banked
+        kernels themselves perform the migration, so the live traffic
+        matches the ``fault_migrate`` trace block the scheduler emitted."""
+        kv = self.kv_cfg
+        old = jnp.asarray(np.asarray(old_ids, np.int32))
+        new = jnp.asarray(np.asarray(new_ids, np.int32))
+        pools = dict(pools)
+        for key, pair in pools.items():
+            out = {}
+            for half in ("k", "v"):
+                rows = KV.gather_pages(self.mem_arch, kv, pair[half], old,
+                                       interpret=self.kernel_interpret)
+                out[half] = KV.scatter_pages(self.mem_arch, kv, pair[half],
+                                             new, rows,
+                                             interpret=self.kernel_interpret)
+            pools[key] = out
+        return pools
+
+    def _recover_page(self, pools, rec, toks, lane_tok, scratch):
+        """Rebuild a corrupted page's data: zero its line in every pool
+        (the data is LOST — this is the ECC-parity path, not migration),
+        re-prefill the victim request's prompt pages, then replay its
+        completed decode steps feeding the recorded tokens.  Every replayed
+        token is pinned against the original — recovery that silently
+        diverges is an error, not a degraded answer."""
+        r = rec["request"]
+        rid, lane = rec["rid"], rec["lane"]
+        pid = int(rec["pid"])
+        pools = {key: {h: p.at[pid].set(0) for h, p in pair.items()}
+                 for key, pair in pools.items()}
+        pools, first = self._ingest_request(
+            pools, np.asarray(r.tokens, np.int32), rec["prompt_ids"])
+        seq = toks[rid]
+        if seq and first != seq[0]:
+            raise RuntimeError(
+                f"recovery diverged for request {rid}: re-prefill produced "
+                f"token {first}, original was {seq[0]}")
+        plen = int(rec["plen"])
+        act = np.zeros(self.max_batch, bool)
+        act[lane] = True
+        for j in range(int(rec["steps"])):
+            pos = np.asarray(rec["pos"]).copy()
+            pos[lane] = plen + j
+            lt = lane_tok.at[lane, 0].set(int(seq[j]))
+            logits, pools = self._decode_sched(
+                self.params, lt, pools, jnp.asarray(rec["page_table"]),
+                jnp.asarray(pos), jnp.asarray(act), scratch)
+            got = int(jnp.argmax(logits[lane, -1, :self.cfg.vocab_size]))
+            if got != int(seq[j + 1]):
+                raise RuntimeError(
+                    f"recovery diverged for request {rid} at replay step "
+                    f"{j}: decoded {got}, original was {int(seq[j + 1])}")
+        return pools
+
+    def run_scheduler(self, requests, policy="seq-skew", scheduler=None,
+                      fault_plan=None, guard=None, checkpoint_dir=None,
+                      resume_from=None) -> SchedulerRunResult:
         """Continuous-batching generation: drive real lane-ragged decode
         steps from ``scheduler.Scheduler`` (greedy sampling).
 
@@ -383,7 +446,20 @@ class ServeEngine:
         and completion order are exactly the simulation's.  The live path
         requires an attention-only model (SSM/hybrid lane state is not
         re-admittable yet — simulation and costing work for any traffic).
+
+        Fault tolerance (docs/ROBUSTNESS.md): ``fault_plan`` injects a
+        seeded ``repro.runtime.FaultPlan`` timeline — bank losses migrate
+        live pages through the banked kernels, corrupted pages re-prefill
+        and replay with every token pinned, transient decode faults retry
+        via ``runtime.retry_step``.  A preemption event (or a tripped
+        ``PreemptionGuard``) checkpoints to ``checkpoint_dir`` after the
+        tick's physics and returns ``preempted=True``; pass the directory
+        back as ``resume_from`` (with ``requests=None`` and the SAME
+        ``fault_plan``) to finish the day with identical tokens.
         """
+        from repro.checkpoint import (latest_step, load_aux,
+                                      restore_checkpoint, save_checkpoint)
+        from repro.runtime import TransientFault, retry_step
         from repro.serving.scheduler import Scheduler
         if self.kv_mode != "paged":
             raise ValueError("run_scheduler requires kv_mode='paged'")
@@ -393,9 +469,13 @@ class ServeEngine:
                 "SSM state eviction/re-admission is not implemented); "
                 "hybrid traffic can still be simulated and costed via "
                 "scheduler.simulate_scheduler_stream")
+        if resume_from is not None and requests is not None:
+            raise ValueError("pass requests=None when resuming: the "
+                             "checkpointed scheduler still holds them")
         sched = scheduler or Scheduler(
             self.kv_cfg, n_lanes=self.max_batch, max_seq=self.max_seq,
-            policy=policy, n_kv_layers=self.n_kv_layers)
+            policy=policy, n_kv_layers=self.n_kv_layers,
+            fault_plan=fault_plan)
         dtype = jnp.dtype(self.rc.compute_dtype)
         pools = {}
         for j, (kind, _) in enumerate(self.cfg.block_pattern()):
@@ -408,8 +488,36 @@ class ServeEngine:
         lane_rid = np.full(self.max_batch, -1, np.int64)
         toks: dict[int, list] = {}
         outputs: dict[int, np.ndarray] = {}
+        if resume_from is not None:
+            step = latest_step(resume_from)
+            if step is None:
+                raise ValueError(f"no checkpoint found in {resume_from}")
+            restored = restore_checkpoint(
+                resume_from, step, {"pools": pools, "lane_tok": lane_tok})
+            pools, lane_tok = restored["pools"], restored["lane_tok"]
+            aux = load_aux(resume_from, step)
+            if aux is None:
+                raise ValueError(
+                    f"checkpoint step {step} in {resume_from} has no "
+                    f"scheduler sidecar (aux.json); was it written by "
+                    f"run_scheduler?")
+            sched.load_state(aux["sched"])
+            toks = {int(k): [int(t) for t in v]
+                    for k, v in aux["toks"].items()}
+            outputs = {int(k): np.asarray(v, np.int32)
+                       for k, v in aux["outputs"].items()}
+            lane_rid = np.asarray(aux["lane_rid"], np.int64)
         self._sched_traces = []
+        preempted, ckpt_path = False, None
         for ev in sched.run(requests):
+            for mig in ev.migrations:
+                if mig["old_ids"]:
+                    pools = self._migrate_pages(pools, mig["old_ids"],
+                                                mig["new_ids"])
+            for rec in ev.recoveries:
+                if not rec["skipped"]:
+                    pools = self._recover_page(pools, rec, toks, lane_tok,
+                                               scratch)
             for c in ev.completed:
                 outputs[c.request.rid] = np.asarray(
                     toks.pop(c.request.rid, []), np.int32)
@@ -426,10 +534,27 @@ class ServeEngine:
                 toks[r.rid] = [first] if r.max_new_tokens >= 1 else []
                 lane_tok = lane_tok.at[adm.lane, 0].set(first)
             if ev.decoded:
-                logits, pools = self._decode_sched(
-                    self.params, lane_tok, pools,
-                    jnp.asarray(ev.page_table), jnp.asarray(ev.pos),
-                    jnp.asarray(ev.active), scratch)
+                args = (self.params, lane_tok, pools,
+                        jnp.asarray(ev.page_table), jnp.asarray(ev.pos),
+                        jnp.asarray(ev.active), scratch)
+                if ev.transients:
+                    # injected transient faults: the step raises
+                    # ``failures`` times before succeeding, and the
+                    # production retry path absorbs every one of them
+                    budget = [ev.transients]
+
+                    def flaky():
+                        if budget[0] > 0:
+                            budget[0] -= 1
+                            raise TransientFault(
+                                f"injected decode fault at tick {ev.tick}")
+                        return self._decode_sched(*args)
+
+                    logits, pools = retry_step(
+                        flaky, retries=ev.transients, backoff=1e-6,
+                        retry_on=(TransientFault,), _sleep=lambda s: None)
+                else:
+                    logits, pools = self._decode_sched(*args)
                 nxt = jnp.argmax(logits[:, -1, :self.cfg.vocab_size],
                                  axis=-1).astype(jnp.int32)[:, None]
                 lane_tok = jnp.where(jnp.asarray(ev.active)[:, None],
@@ -438,12 +563,29 @@ class ServeEngine:
                 for lane in np.flatnonzero(ev.active):
                     toks[int(lane_rid[lane])].append(int(nxt_np[lane]))
             self._sched_traces.extend(ev.traces)
+            if ev.preempt or (guard is not None and guard.should_stop):
+                if checkpoint_dir is None:
+                    raise ValueError(
+                        "preemption fired but run_scheduler has no "
+                        "checkpoint_dir to drain into")
+                aux = {"sched": sched.state_dict(),
+                       "toks": {str(k): [int(t) for t in v]
+                                for k, v in toks.items()},
+                       "outputs": {str(k): np.asarray(v).tolist()
+                                   for k, v in outputs.items()},
+                       "lane_rid": lane_rid.tolist()}
+                ckpt_path = save_checkpoint(
+                    checkpoint_dir, sched.now,
+                    {"pools": pools, "lane_tok": lane_tok}, aux=aux)
+                preempted = True
+                break
         self._sched_meta = {"what": "scheduler-live",
                             "arch": self.mem_arch.name,
                             "policy": sched.policy_name,
                             "n_requests": len(outputs), "ticks": sched.now}
         return SchedulerRunResult(outputs=outputs, stats=sched.stats(),
-                                  ticks=sched.now)
+                                  ticks=sched.now, preempted=preempted,
+                                  checkpoint=ckpt_path)
 
     def scheduler_stream(self):
         """The last ``run_scheduler``'s KV traffic as a re-iterable

@@ -42,11 +42,13 @@ across banks (docs/SERVING.md works the 16B-xor example).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Iterator
 
 import numpy as np
 
+from repro.runtime.faults import FaultEvent, FaultPlan
 from repro.serving.kvcache import (PagedKVConfig, kv_read_stream, pool_pages,
                                    resolve_policy)
 
@@ -54,6 +56,7 @@ __all__ = [
     "Request", "Admission", "Completion", "TickEvent",
     "PagePool", "Scheduler",
     "scheduler_step_trace", "admission_prefill_trace",
+    "fault_migrate_trace",
     "simulate_scheduler_stream", "synthesize_requests",
     "scheduler_pool_config", "total_new_tokens", "CONTEXT_DISTS",
 ]
@@ -178,6 +181,7 @@ class PagePool:
         self.free = np.ones((self.n_banks, self.pages_per_bank), bool)
         self.bank_used = np.zeros(self.n_banks, np.int64)
         self.policy = resolve_policy(policy)
+        self.offline: set[int] = set()                 # hard-failed banks
         self._where: dict[int, tuple[int, int]] = {}   # id -> (bank, slot)
         self._kbank = np.zeros(0, np.int64)            # bank_map(k) cache
         # (bank, slot) -> logical id, precomputed once: alloc is pure numpy
@@ -234,6 +238,55 @@ class PagePool:
             self.free[bank, slot] = True
             self.bank_used[bank] -= 1
 
+    def offline_bank(self, bank: int) -> list[int]:
+        """Take a whole bank out of service (a hard memory fault).
+
+        Every free slot in the bank becomes unavailable (``alloc`` spills
+        away from it automatically — a dead bank is never in the open-bank
+        scan) and every LIVE page on it is evicted from the allocation map
+        WITHOUT returning to the pool, so its id can never be re-minted.
+        Returns the evicted live page ids in ascending order; the caller
+        owns migrating their data to freshly allocated surviving-bank
+        pages.  Idempotent: a second call for the same bank returns [].
+        """
+        if not 0 <= bank < self.n_banks:
+            raise ValueError(f"bank {bank} out of range "
+                             f"[0, {self.n_banks})")
+        if bank in self.offline:
+            return []
+        self.offline.add(bank)
+        self.free[bank, :] = False
+        live = sorted(p for p, (b, _) in self._where.items() if b == bank)
+        for pid in live:
+            del self._where[pid]
+        return live
+
+    # -- checkpoint serialization ------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-serializable allocator state (``Scheduler.state_dict``'s
+        pool section); restore with ``load_state`` on a pool built from
+        the SAME ``PagedKVConfig`` and reserve set."""
+        return {
+            "free": self.free.astype(int).tolist(),
+            "bank_used": self.bank_used.tolist(),
+            "where": {str(p): [int(b), int(s)]
+                      for p, (b, s) in sorted(self._where.items())},
+            "offline": sorted(self.offline),
+        }
+
+    def load_state(self, state: dict) -> None:
+        free = np.asarray(state["free"], bool)
+        if free.shape != self.free.shape:
+            raise ValueError(
+                f"pool shape mismatch: checkpoint free bitmap is "
+                f"{free.shape}, this pool is {self.free.shape}")
+        self.free = free
+        self.bank_used = np.asarray(state["bank_used"], np.int64)
+        self._where = {int(p): (int(b), int(s))
+                       for p, (b, s) in state["where"].items()}
+        self.offline = {int(b) for b in state["offline"]}
+
 
 # --------------------------------------------------------------------------
 # trace lowering of one ragged tick
@@ -259,8 +312,37 @@ def admission_prefill_trace(cfg: PagedKVConfig, page_ids: np.ndarray,
     return t
 
 
+def fault_migrate_trace(cfg: PagedKVConfig, old_ids, new_ids,
+                        n_kv_layers: int = 1, bank: int | None = None,
+                        tick: int | None = None):
+    """A bank-loss page migration's exact ``AddressTrace``: per KV layer,
+    a K and a V gather of the dying bank's live pages followed by a K and
+    a V scatter to their freshly allocated surviving-bank homes.  This is
+    ordinary banked traffic — the cost model prices the evacuation burst
+    with the same conflict formula as any Table II/III kernel."""
+    from repro.core.trace import AddressTrace
+    from repro.kernels.banked_gather.ops import banked_gather_trace
+    from repro.kernels.banked_scatter.ops import banked_scatter_trace
+    old = np.asarray(old_ids, np.int32).reshape(-1)
+    new = np.asarray(new_ids, np.int32).reshape(-1)
+    if old.shape != new.shape:
+        raise ValueError(f"old/new page-id counts disagree "
+                         f"({old.shape[0]} vs {new.shape[0]})")
+    mask = np.ones(old.shape[0], bool)
+    chunks = []
+    for _ in range(n_kv_layers):
+        for _kv in range(2):                           # K then V
+            chunks.append(banked_gather_trace(None, None, old, mask=mask))
+            chunks.append(banked_scatter_trace(None, None, new, mask=mask))
+    t = AddressTrace.concat(*chunks)
+    t.meta.update({"what": "fault_migrate", "bank": bank, "tick": tick,
+                   "n_pages": int(old.shape[0]), "n_kv_layers": n_kv_layers})
+    return t
+
+
 def scheduler_step_trace(cfg: PagedKVConfig, page_table, pos, active,
-                         n_kv_layers: int = 1, tick: int | None = None):
+                         n_kv_layers: int = 1, tick: int | None = None,
+                         degraded: bool = False):
     """One lane-ragged decode step's exact ``AddressTrace``.
 
     Generalizes ``kvcache.decode_step_trace`` to per-lane positions and an
@@ -295,7 +377,8 @@ def scheduler_step_trace(cfg: PagedKVConfig, page_table, pos, active,
         chunks.append(banked_scatter_trace(None, None, cur_ids,
                                            mask=cur_mask))
     t = AddressTrace.concat(*chunks)
-    t.meta.update({"what": "sched_decode", "tick": tick,
+    t.meta.update({"what": ("sched_decode_degraded" if degraded
+                            else "sched_decode"), "tick": tick,
                    "active": int(active.sum()), "n_kv_layers": n_kv_layers})
     return t
 
@@ -339,6 +422,17 @@ class TickEvent:
     page_table: np.ndarray | None = None    # decode-time snapshot (B, P)
     pos: np.ndarray | None = None           # (B,) pre-increment positions
     active: np.ndarray | None = None        # (B,) decoding lanes
+    #: fault/recovery records for this tick (``FaultPlan`` injection; see
+    #: docs/ROBUSTNESS.md).  ``migrations`` holds one record per bank loss
+    #: ({bank, old_ids, new_ids, lanes, slots}); ``recoveries`` one per
+    #: corrupted page ({rid, lane, request, pid, plen, steps, prompt_ids,
+    #: page_table, pos}); ``transients`` counts injected decode failures
+    #: the live driver must retry through; ``preempt`` asks the driver to
+    #: checkpoint and stop after this tick's physics.
+    migrations: list = field(default_factory=list)
+    recoveries: list = field(default_factory=list)
+    transients: int = 0
+    preempt: bool = False
 
 
 class Scheduler:
@@ -362,7 +456,9 @@ class Scheduler:
 
     def __init__(self, cfg: PagedKVConfig, n_lanes: int = 16,
                  max_seq: int = 256, policy="seq-skew",
-                 n_kv_layers: int = 1, reserve_scratch: bool = True):
+                 n_kv_layers: int = 1, reserve_scratch: bool = True,
+                 fault_plan: FaultPlan | None = None,
+                 watchdog=None, timer: Callable[[], float] = time.perf_counter):
         self.cfg = cfg
         self.n_lanes = n_lanes
         self.max_seq = max_seq
@@ -388,6 +484,34 @@ class Scheduler:
         self._cancelled: set[int] = set()
         self._busy_lane_ticks = 0
         self._decode_ticks = 0
+        #: seeded fault timeline (``repro.runtime.faults.FaultPlan``) —
+        #: events fire at the START of their tick, before completions, in
+        #: both live and simulated runs, so the emitted trace blocks and
+        #: the allocator decisions stay bit-equal across the two paths.
+        self._fault_plan = fault_plan
+        self._fault_cursor = 0
+        self._degraded = False
+        self._dead_banks: list[int] = []
+        self._n_migrated_pages = 0
+        self._n_recoveries = 0
+        self._n_transients = 0
+        self._n_preempts = 0
+        #: optional straggler detection (``repro.runtime.StepWatchdog``):
+        #: tick() times each decode step with ``timer`` and feeds the
+        #: watchdog; straggler ticks are recorded (chaining any caller
+        #: callback) and surfaced via ``stats()``.
+        self._watchdog = watchdog
+        self._timer = timer
+        self._straggler_ticks: list[int] = []
+        if watchdog is not None:
+            user_cb = watchdog.on_straggler
+
+            def _record(step, seconds, med, _user=user_cb):
+                self._straggler_ticks.append(int(step))
+                if _user is not None:
+                    _user(step, seconds, med)
+
+            watchdog.on_straggler = _record
 
     # -- submission / cancellation -----------------------------------------
 
@@ -415,6 +539,125 @@ class Scheduler:
         if rid not in self._by_rid:
             raise KeyError(f"unknown request id {rid}")
         self._cancelled.add(rid)
+
+    # -- fault injection and recovery ---------------------------------------
+
+    @property
+    def dead_banks(self) -> tuple:
+        """Banks lost so far, ascending (names the degraded arch variant:
+        ``base.degrade(sched.dead_banks)`` prices the current layout)."""
+        return tuple(sorted(self._dead_banks))
+
+    def _apply_faults(self, ev: TickEvent) -> None:
+        if self._fault_plan is None:
+            return
+        events, self._fault_cursor = self._fault_plan.due(
+            self.now, self._fault_cursor)
+        for f in events:
+            if f.kind == "bank_offline":
+                self._bank_offline(f, ev)
+            elif f.kind == "page_corrupt":
+                self._page_corrupt(f, ev)
+            elif f.kind == "decode_transient":
+                ev.transients += f.failures
+                self._n_transients += f.failures
+            elif f.kind == "preempt":
+                ev.preempt = True
+                self._n_preempts += 1
+
+    def _bank_offline(self, f: FaultEvent, ev: TickEvent) -> None:
+        """Lose a bank: evict its live pages from the pool, migrate each to
+        a freshly allocated surviving-bank page (same in-sequence index, so
+        the preferred-bank policy re-places it), patch the page tables, and
+        emit the evacuation burst as a ``fault_migrate`` trace block.  Data
+        is PRESERVED — a bank loss is graceful degradation, not data loss
+        (contrast ``page_corrupt``)."""
+        if self.scratch_page is not None:
+            sb = int(np.asarray(
+                self.cfg.layout.bank_slot(np.asarray(self.scratch_page))[0]))
+            if f.bank == sb:
+                raise ValueError(
+                    f"bank {f.bank} hosts the reserved scratch page; the "
+                    f"fault plan may not take it offline (synthesize() "
+                    f"never picks it)")
+        live = self.pool.offline_bank(f.bank)
+        self._degraded = True
+        if f.bank not in self._dead_banks:
+            self._dead_banks.append(f.bank)
+        liveset = set(live)
+        old_ids: list[int] = []
+        new_ids: list[int] = []
+        lanes: list[int] = []
+        slots: list[int] = []
+        for lane in range(self.n_lanes):          # deterministic order
+            row = self.page_table[lane]
+            for k in np.flatnonzero(row >= 0):
+                pid = int(row[k])
+                if pid in liveset:
+                    new = self.pool.alloc(int(k), int(self.lane_rid[lane]))
+                    row[k] = new
+                    old_ids.append(pid)
+                    new_ids.append(new)
+                    lanes.append(lane)
+                    slots.append(int(k))
+        if len(old_ids) != len(live):
+            raise RuntimeError(
+                f"bank {f.bank}: {len(live)} live pages but only "
+                f"{len(old_ids)} found in lane page tables")
+        ev.migrations.append({"tick": self.now, "bank": f.bank,
+                              "old_ids": old_ids, "new_ids": new_ids,
+                              "lanes": lanes, "slots": slots})
+        self._n_migrated_pages += len(old_ids)
+        if old_ids:
+            ev.traces.append(fault_migrate_trace(
+                self.cfg, old_ids, new_ids, self.n_kv_layers,
+                bank=f.bank, tick=self.now))
+
+    def _page_corrupt(self, f: FaultEvent, ev: TickEvent) -> None:
+        """An uncorrectable page error (ECC parity): the page's data is
+        LOST.  Recovery re-derives it — re-prefill the request's prompt
+        pages, then replay its ``lane_pos - prompt_len`` completed decode
+        steps one lane at a time (positions ``plen+j``), which rebuilds
+        every decode-written slot in order.  The replay's trace blocks are
+        emitted here so simulation replays the same burst; the live driver
+        additionally re-runs the model and pins the replayed tokens
+        against the originals.  A request that is no longer resident
+        (completed / still queued) makes the event a recorded no-op."""
+        lanes = np.flatnonzero(self.lane_rid == f.rid)
+        if lanes.size == 0:
+            ev.recoveries.append({"tick": self.now, "rid": f.rid,
+                                  "lane": -1, "skipped": True})
+            return
+        lane = int(lanes[0])
+        r = self._by_rid[f.rid]
+        row = self.page_table[lane]
+        mapped = row[row >= 0]
+        pid = int(mapped[f.page_idx % mapped.shape[0]])
+        plen = r.prompt_len
+        n_pref = -(-plen // self.cfg.page_len)
+        prompt_ids = row[:n_pref].copy()
+        steps = int(self.lane_pos[lane]) - plen
+        t = admission_prefill_trace(self.cfg, prompt_ids, self.n_kv_layers,
+                                    rid=f.rid)
+        t.meta["what"] = "fault_reprefill"
+        t.meta["tick"] = self.now
+        ev.traces.append(t)
+        for j in range(steps):
+            pos = self.lane_pos.copy()
+            pos[lane] = plen + j
+            act = np.zeros(self.n_lanes, bool)
+            act[lane] = True
+            tr = scheduler_step_trace(self.cfg, self.page_table.copy(), pos,
+                                      act, self.n_kv_layers, tick=self.now,
+                                      degraded=self._degraded)
+            tr.meta["replay"] = True
+            ev.traces.append(tr)
+        ev.recoveries.append({"tick": self.now, "rid": f.rid, "lane": lane,
+                              "request": r, "pid": pid, "plen": plen,
+                              "steps": steps, "prompt_ids": prompt_ids,
+                              "page_table": self.page_table.copy(),
+                              "pos": self.lane_pos.copy(), "skipped": False})
+        self._n_recoveries += 1
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -474,17 +717,23 @@ class Scheduler:
         ev.active = active
         ev.traces.append(scheduler_step_trace(
             self.cfg, ev.page_table, ev.pos, active, self.n_kv_layers,
-            tick=self.now))
+            tick=self.now, degraded=self._degraded))
         self.lane_pos[active] += 1
         self.lane_steps_left[active] -= 1
         self._decode_ticks += 1
 
     def tick(self) -> TickEvent:
-        """Run one scheduler tick (see class docstring for the phases)."""
+        """Run one scheduler tick (see class docstring for the phases;
+        fault events due at this tick fire FIRST, so migrations and
+        recoveries see the lane state the fault struck)."""
         ev = TickEvent(tick=self.now)
+        self._apply_faults(ev)
         self._complete(ev)
         self._admit(ev)
+        t0 = self._timer()
         self._decode(ev)
+        if ev.decoded and self._watchdog is not None:
+            self._watchdog.observe(self.now, self._timer() - t0)
         self._busy_lane_ticks += int((self.lane_rid >= 0).sum())
         if not ev.decoded and not self.queue and not self.done():
             # only draining lanes remain: the next tick completes them
@@ -512,13 +761,98 @@ class Scheduler:
         what the preferred-bank policy is judged on)."""
         from repro.serving.kvcache import bank_load_stats
         ticks = max(1, self.now)
-        return {
+        out = {
             "ticks": self.now,
             "decode_ticks": self._decode_ticks,
             "lane_occupancy": self._busy_lane_ticks / (ticks * self.n_lanes),
             **{f"bank_{k}": float(v)
                for k, v in bank_load_stats(self.pool).items()},
+            "faults": {
+                "migrated_pages": self._n_migrated_pages,
+                "recoveries": self._n_recoveries,
+                "transients": self._n_transients,
+                "preempts": self._n_preempts,
+                "dead_banks": list(self.dead_banks),
+                "degraded": self._degraded,
+            },
         }
+        if self._watchdog is not None:
+            out["stragglers"] = self._watchdog.stragglers
+            out["straggler_ticks"] = list(self._straggler_ticks)
+        return out
+
+    # -- checkpoint serialization --------------------------------------------
+
+    def state_dict(self) -> dict:
+        """The scheduler's full control-plane state as a JSON-serializable
+        dict (lane arrays, queue, pool bitmap, fault cursor and counters) —
+        the ``aux`` half of a serving checkpoint (the KV pools themselves
+        are device arrays, saved by ``repro.checkpoint``).  The fault plan
+        and watchdog are NOT serialized: re-supply the same plan at
+        construction and ``fault_cursor`` resumes it exactly."""
+        def req(r: Request) -> dict:
+            return {"rid": r.rid, "arrival": r.arrival,
+                    "prompt_len": r.prompt_len,
+                    "max_new_tokens": r.max_new_tokens,
+                    "tokens": (None if r.tokens is None
+                               else np.asarray(r.tokens).tolist())}
+        return {
+            "now": int(self.now),
+            "lane_rid": self.lane_rid.tolist(),
+            "lane_pos": self.lane_pos.tolist(),
+            "lane_steps_left": self.lane_steps_left.tolist(),
+            "page_table": self.page_table.tolist(),
+            "queue": [r.rid for r in self.queue],
+            "requests": [req(r) for r in self._by_rid.values()],
+            "cancelled": sorted(self._cancelled),
+            "busy_lane_ticks": int(self._busy_lane_ticks),
+            "decode_ticks": int(self._decode_ticks),
+            "fault_cursor": int(self._fault_cursor),
+            "degraded": bool(self._degraded),
+            "dead_banks": [int(b) for b in self._dead_banks],
+            "migrated_pages": int(self._n_migrated_pages),
+            "recoveries": int(self._n_recoveries),
+            "transients": int(self._n_transients),
+            "preempts": int(self._n_preempts),
+            "straggler_ticks": list(self._straggler_ticks),
+            "pool": self.pool.state_dict(),
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore ``state_dict`` output into a scheduler built with the
+        SAME config (pool layout, lane count, max_seq, kv layers)."""
+        lane_rid = np.asarray(state["lane_rid"], np.int64)
+        if lane_rid.shape[0] != self.n_lanes:
+            raise ValueError(
+                f"checkpoint has {lane_rid.shape[0]} lanes, this scheduler "
+                f"has {self.n_lanes}")
+        self.now = int(state["now"])
+        self.lane_rid = lane_rid
+        self.lane_pos = np.asarray(state["lane_pos"], np.int32)
+        self.lane_steps_left = np.asarray(state["lane_steps_left"], np.int32)
+        self.page_table = np.asarray(state["page_table"], np.int32)
+        by: dict[int, Request] = {}
+        for d in state["requests"]:
+            tokens = (None if d["tokens"] is None
+                      else np.asarray(d["tokens"], np.int32))
+            by[int(d["rid"])] = Request(
+                rid=int(d["rid"]), arrival=int(d["arrival"]),
+                prompt_len=int(d["prompt_len"]),
+                max_new_tokens=int(d["max_new_tokens"]), tokens=tokens)
+        self._by_rid = by
+        self.queue = [by[int(r)] for r in state["queue"]]
+        self._cancelled = {int(r) for r in state["cancelled"]}
+        self._busy_lane_ticks = int(state["busy_lane_ticks"])
+        self._decode_ticks = int(state["decode_ticks"])
+        self._fault_cursor = int(state["fault_cursor"])
+        self._degraded = bool(state["degraded"])
+        self._dead_banks = [int(b) for b in state["dead_banks"]]
+        self._n_migrated_pages = int(state["migrated_pages"])
+        self._n_recoveries = int(state["recoveries"])
+        self._n_transients = int(state["transients"])
+        self._n_preempts = int(state["preempts"])
+        self._straggler_ticks = [int(t) for t in state["straggler_ticks"]]
+        self.pool.load_state(state["pool"])
 
 
 # --------------------------------------------------------------------------
@@ -549,7 +883,8 @@ def scheduler_pool_config(arch, n_lanes: int, max_seq: int,
 def simulate_scheduler_stream(arch, requests: list[Request],
                               n_lanes: int = 16, max_seq: int = 256,
                               page_len: int = 8, n_kv_layers: int = 1,
-                              policy="seq-skew"):
+                              policy="seq-skew",
+                              fault_plan: FaultPlan | None = None):
     """A serving day's KV traffic as a lazy, re-iterable
     ``repro.core.trace.TraceStream`` — one source block per prefill ingest
     / ragged decode step, produced on demand by replaying the scheduler
@@ -560,6 +895,12 @@ def simulate_scheduler_stream(arch, requests: list[Request],
     architecture-DEPENDENT: the pool places pages under the arch's bank
     map (skewed by ``policy``), so ``bench.scheduler_workload`` re-lowers
     per banked layout.
+
+    ``fault_plan`` replays a seeded fault timeline inside every
+    iteration's fresh scheduler (a ``FaultPlan`` is immutable; the replay
+    cursor lives in the scheduler), so a faulted day's stream is as
+    re-iterable and deterministic as a healthy one — and bit-equal to a
+    live ``ServeEngine.run_scheduler`` run under the same plan.
     """
     from repro.core.trace import TraceStream
     cfg = scheduler_pool_config(arch, n_lanes, max_seq, page_len)
@@ -567,14 +908,18 @@ def simulate_scheduler_stream(arch, requests: list[Request],
 
     def blocks():
         sched = Scheduler(cfg, n_lanes=n_lanes, max_seq=max_seq,
-                          policy=policy, n_kv_layers=n_kv_layers)
+                          policy=policy, n_kv_layers=n_kv_layers,
+                          fault_plan=fault_plan)
         for ev in sched.run(reqs):
             yield from ev.traces
 
     from repro.core import arch as _arch
-    return TraceStream(blocks, meta={
+    meta = {
         "what": "scheduler", "arch": _arch.resolve(arch).name,
         "n_requests": len(reqs), "n_lanes": n_lanes, "max_seq": max_seq,
         "page_len": page_len, "n_kv_layers": n_kv_layers,
         "policy": policy if isinstance(policy, str) else "custom",
-        "n_tokens": total_new_tokens(reqs)})
+        "n_tokens": total_new_tokens(reqs)}
+    if fault_plan is not None:
+        meta["faults"] = fault_plan.counts()
+    return TraceStream(blocks, meta=meta)

@@ -76,6 +76,86 @@ def test_legal_tracestream_constructions_not_flagged():
 
 
 # --------------------------------------------------------------------------
+# REPRO005: bare except / swallowed exceptions
+# --------------------------------------------------------------------------
+
+def test_bare_except_flagged():
+    src = (
+        "try:\n"
+        "    step()\n"
+        "except:\n"
+        "    log()\n"
+    )
+    fs = lint_file("x.py", source=src)
+    assert _codes(fs) == ["REPRO005"] and fs[0].line == 3
+    assert "bare" in fs[0].message
+
+
+def test_swallowed_exception_flagged():
+    src = (
+        "try:\n"
+        "    step()\n"
+        "except ValueError:\n"
+        "    pass\n"
+        "try:\n"
+        "    step()\n"
+        "except OSError:\n"
+        "    ...\n"
+    )
+    fs = lint_file("x.py", source=src)
+    assert _codes(fs) == ["REPRO005", "REPRO005"]
+    assert [f.line for f in fs] == [3, 7]
+    assert "swallowed" in fs[0].message
+
+
+def test_handled_exceptions_not_flagged():
+    """The repo's real idioms stay clean: re-raise, log-and-continue,
+    fallback values, typed handlers with bodies."""
+    src = (
+        "try:\n"
+        "    step()\n"
+        "except RuntimeError as e:\n"
+        "    log.warning('retry: %s', e)\n"
+        "except ValueError:\n"
+        "    raise\n"
+        "try:\n"
+        "    v = parse(s)\n"
+        "except KeyError:\n"
+        "    v = default\n"
+    )
+    assert lint_file("x.py", source=src) == []
+
+
+def test_silent_except_waiver_honored():
+    src = (
+        "try:\n"
+        "    cleanup()\n"
+        "except OSError:  # lint: allow-silent-except\n"
+        "    pass\n"
+        "# lint: allow-silent-except — best-effort teardown\n"
+        "try:\n"
+        "    close()\n"
+        "except:\n"
+        "    pass\n"
+    )
+    # second handler: waiver sits on the line above the try, not the
+    # except — still outside the handler span, so it must NOT apply
+    fs = lint_file("x.py", source=src)
+    assert _codes(fs) == ["REPRO005"] and fs[0].line == 8
+
+
+def test_silent_except_waiver_on_line_above_except():
+    src = (
+        "try:\n"
+        "    close()\n"
+        "# lint: allow-silent-except\n"
+        "except:\n"
+        "    pass\n"
+    )
+    assert lint_file("x.py", source=src) == []
+
+
+# --------------------------------------------------------------------------
 # The shipped tree and registries are clean (the CI gate)
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,529 @@
+"""ISSUE 9 robustness suite: seeded fault plans, degraded-architecture
+pricing, page-pool bank loss, chaos-day replay determinism (sim and live),
+the watchdog wired into scheduler ticks, hardened retry/restore, and the
+preemption checkpoint/resume pin — a faulted serving day must finish every
+request with tokens identical to the uninterrupted run."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import validate
+from repro.analysis.symbolic import prove
+from repro.checkpoint import (latest_step, load_aux, restore_checkpoint,
+                              save_checkpoint)
+from repro.configs import get_smoke_config
+from repro.configs.base import RunConfig
+from repro.core import arch as A
+from repro.core.arch import surviving_bank_remap
+from repro.core.cost_engine import cost_many
+from repro.core.trace import KIND_LOAD, KIND_STORE, LANES, AddressTrace
+from repro.isa.programs import transpose as tr_prog
+from repro.launch.sharding import NO_AXES
+from repro.models import init_tree, model_specs
+from repro.runtime import (FaultEvent, FaultPlan, StepWatchdog,
+                           retry_step)
+from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import (PagePool, Request, Scheduler,
+                                     fault_migrate_trace,
+                                     scheduler_pool_config,
+                                     simulate_scheduler_stream)
+
+CFG = get_smoke_config("llama3.2-1b")
+RC = RunConfig(remat="none", attn_impl="dense")
+PARAMS = init_tree(model_specs(CFG), jax.random.PRNGKey(0))
+
+#: the pinned live-vs-sim traffic of tests/test_scheduler.py — reused so a
+#: faulted day is directly comparable to the healthy baseline
+TRAFFIC = ((0, 12, 8), (0, 5, 6), (1, 8, 4), (2, 3, 0), (2, 9, 5),
+           (3, 12, 3))
+
+#: one of everything recoverable: a bank dies mid-day, a resident page
+#: fails ECC, a decode step flakes twice
+CHAOS_PLAN = FaultPlan((
+    FaultEvent(tick=3, kind="bank_offline", bank=1),
+    FaultEvent(tick=5, kind="page_corrupt", rid=0, page_idx=0),
+    FaultEvent(tick=6, kind="decode_transient", failures=2),
+))
+
+
+def _requests(spec=TRAFFIC, seed=0, tokens=True):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, arrival=a, prompt_len=p, max_new_tokens=m,
+                    tokens=(rng.integers(0, CFG.vocab_size, p)
+                            .astype(np.int32) if tokens else None))
+            for i, (a, p, m) in enumerate(spec)]
+
+
+# -- fault plans -------------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(tick=0, kind="meteor_strike")
+    with pytest.raises(ValueError):
+        FaultEvent(tick=-1, kind="preempt")
+    with pytest.raises(ValueError):
+        FaultEvent(tick=0, kind="bank_offline")            # no bank
+    with pytest.raises(ValueError):
+        FaultEvent(tick=0, kind="page_corrupt")            # no victim
+    with pytest.raises(ValueError):
+        FaultEvent(tick=0, kind="decode_transient", failures=0)
+
+
+def test_fault_plan_ordering_cursor_and_counts():
+    with pytest.raises(ValueError):
+        FaultPlan((FaultEvent(tick=5, kind="preempt"),
+                   FaultEvent(tick=2, kind="preempt")))
+    plan = CHAOS_PLAN
+    assert len(plan) == 3 and plan.counts() == {
+        "bank_offline": 1, "page_corrupt": 1, "decode_transient": 1}
+    assert not plan.has_preempt
+    evs, cur = plan.due(2, 0)
+    assert evs == () and cur == 0
+    evs, cur = plan.due(3, cur)
+    assert [e.kind for e in evs] == ["bank_offline"] and cur == 1
+    # an idle fast-forward past ticks 5 AND 6 still fires both, in order
+    evs, cur = plan.due(9, cur)
+    assert [e.kind for e in evs] == ["page_corrupt", "decode_transient"]
+    assert cur == 3
+    assert plan.due(99, cur) == ((), 3)
+
+
+def test_synthesize_is_seeded_and_scratch_safe():
+    a = FaultPlan.synthesize(seed=11, n_events=4, horizon=16, n_banks=16)
+    b = FaultPlan.synthesize(seed=11, n_events=4, horizon=16, n_banks=16)
+    assert a.events == b.events
+    assert a.events != FaultPlan.synthesize(
+        seed=12, n_events=4, horizon=16, n_banks=16).events
+    ticks = [e.tick for e in a]
+    assert ticks == sorted(ticks) and all(1 <= t < 16 for t in ticks)
+    # the last bank hosts the reserved scratch page: never offlined
+    assert all(e.bank < 15 for e in a)
+
+
+# -- degraded architecture variants ------------------------------------------
+
+def test_degraded_name_round_trips_but_is_never_registered():
+    deg = A.get("16B-xor").degrade((1, 3))
+    assert deg.name == "16B-xor!d1+3"
+    assert deg.dead_banks == (1, 3)
+    assert A.resolve("16B-xor!d1+3").spec == deg.spec
+    assert deg.base.name == "16B-xor"
+    # degrading a degraded memory flattens into one canonical variant
+    assert deg.degrade((2,)).name == "16B-xor!d1+2+3"
+    assert not any("!d" in n for n in A.names())   # run-state, not a point
+    with pytest.raises(KeyError):
+        A.get("16B-xor!d3+1")                      # non-canonical order
+    with pytest.raises(KeyError):
+        A.get("16B-xor!d99")                       # bank out of range
+    from repro.core.arch import DegradedBankedMemory
+    with pytest.raises(ValueError, match="not banked"):
+        DegradedBankedMemory(A.get("4R-2W").spec, (0,))
+
+
+def test_surviving_bank_remap_and_banks_of():
+    deg = A.get("16B-xor").degrade((1, 3))
+    remap = deg.bank_remap()
+    assert remap == surviving_bank_remap(16, (1, 3))
+    assert remap[1] == 2 and remap[3] == 4          # next surviving neighbor
+    assert remap[0] == 0 and remap[2] == 2          # survivors untouched
+    banks = np.asarray(deg.banks_of(np.arange(256, dtype=np.int32)))
+    assert not np.isin(banks, [1, 3]).any()         # dead banks take no traffic
+    with pytest.raises(ValueError):
+        surviving_bank_remap(16, (16,))
+    with pytest.raises(ValueError):
+        surviving_bank_remap(4, (0, 1, 2, 3))       # can't lose them all
+
+
+def _mixed_trace(n_ops=48, seed=0):
+    rng = np.random.default_rng(seed)
+    addrs = rng.integers(0, 4096, size=(n_ops, LANES)).astype(np.int32)
+    kinds = np.where(rng.random(n_ops) < 0.3, KIND_STORE,
+                     KIND_LOAD).astype(np.int8)
+    return AddressTrace(addrs, kinds, np.arange(n_ops, dtype=np.int32))
+
+
+def test_cost_many_prices_degraded_variants_bit_exactly():
+    """The batched lattice path applies the surviving-bank remap exactly
+    like the direct single-arch path — including a mixed healthy/degraded
+    lattice across different bank widths."""
+    tr = _mixed_trace()
+    archs = [A.get("16B-xor"), A.get("16B-xor").degrade((1,)),
+             A.get("8B").degrade((0, 5)), A.get("4B-fold").degrade((2,)),
+             A.get("4R-2W")]
+    batched = cost_many(archs, tr)
+    for a, got in zip(archs, batched):
+        assert got.total_cycles == a.cost(tr).total_cycles, a.name
+    # fewer banks to arbitrate over can never be cheaper
+    assert batched[1].total_cycles >= batched[0].total_cycles
+
+
+def test_symbolic_prover_rejects_degraded_specs():
+    deg = A.get("16B-xor").degrade((3,))
+    with pytest.raises(NotImplementedError, match="degraded"):
+        prove(deg, tr_prog.symbolic_trace(64))
+
+
+# -- page pool bank loss -----------------------------------------------------
+
+def test_pool_offline_bank_evicts_live_and_poisons_free_slots():
+    cfg = scheduler_pool_config("16B", 4, 64, 8)
+    pool = PagePool(cfg, policy="seq-skew")
+    ids = [pool.alloc(k, seq) for seq in range(4) for k in range(4)]
+    lay = cfg.layout
+    on_b1 = sorted(p for p in ids
+                   if int(np.asarray(lay.bank_slot(np.asarray(p))[0])) == 1)
+    free_before = pool.n_free
+    dead = pool.offline_bank(1)
+    assert dead == on_b1                            # live ids, ascending
+    # dead-bank FREE slots also leave the pool (not just the live pages)
+    assert pool.n_free == free_before - (cfg.n_pages // 16 - len(dead))
+    assert pool.offline_bank(1) == []               # idempotent
+    with pytest.raises(ValueError):
+        pool.offline_bank(99)
+    # an evicted id was never released: it can't be double-freed back in
+    with pytest.raises(ValueError):
+        pool.release([dead[0]])
+    # and the dead bank is never chosen again, even under preference
+    for k in range(8):
+        pid = pool.alloc(k, 1)
+        assert int(np.asarray(lay.bank_slot(np.asarray(pid))[0])) != 1
+
+
+def test_scratch_bank_offline_is_rejected():
+    plan = FaultPlan((FaultEvent(tick=0, kind="bank_offline", bank=15),))
+    s = Scheduler(scheduler_pool_config("16B", 4, 32, 8), n_lanes=4,
+                  max_seq=32, fault_plan=plan)
+    s.submit(_requests(((0, 4, 2),), tokens=False))
+    with pytest.raises(ValueError, match="scratch"):
+        s.tick()
+
+
+def test_bank_offline_with_no_live_pages_emits_no_migration_traffic():
+    plan = FaultPlan((FaultEvent(tick=0, kind="bank_offline", bank=2),))
+    s = Scheduler(scheduler_pool_config("16B", 4, 32, 8), n_lanes=4,
+                  max_seq=32, fault_plan=plan)
+    s.submit(_requests(((2, 4, 2),), tokens=False))
+    ev = s.tick()
+    assert ev.migrations and ev.migrations[0]["old_ids"] == []
+    assert not any(t.meta.get("what") == "fault_migrate" for t in ev.traces)
+    assert s.dead_banks == (2,)
+
+
+def test_fault_migrate_trace_validates_id_counts():
+    cfg = scheduler_pool_config("16B", 4, 32, 8)
+    t = fault_migrate_trace(cfg, [3, 4], [7, 9], n_kv_layers=2, bank=1)
+    assert t.meta["what"] == "fault_migrate" and t.n_ops == 8
+    with pytest.raises(ValueError):
+        fault_migrate_trace(cfg, [3, 4], [7])
+
+
+# -- simulated chaos matrix --------------------------------------------------
+
+@pytest.mark.parametrize("arch", ("16B-xor", "4R-2W"))
+@pytest.mark.parametrize("plan_name", ("explicit", "synthesized"))
+def test_sim_chaos_day_completes_validates_and_reiterates(arch, plan_name):
+    """The satellite chaos matrix: fault kind × tick × arch.  Every faulted
+    day completes all requests, passes the trace contract, replays
+    bit-identically on re-iteration, and leaks no pages."""
+    plan = (CHAOS_PLAN if plan_name == "explicit"
+            else FaultPlan.synthesize(seed=11, n_events=3, horizon=7,
+                                      n_banks=16, n_rids=6))
+    reqs = _requests(tokens=False)
+    stream = simulate_scheduler_stream(arch, reqs, n_lanes=4, max_seq=32,
+                                       page_len=8, fault_plan=plan)
+    assert stream.meta["faults"] == plan.counts()
+    rep1 = validate(stream, arch=arch, block_ops=64)
+    rep2 = validate(stream, arch=arch, block_ops=64)      # fresh replay
+    assert rep1.ok, rep1.violations
+    assert rep1.n_ops == rep2.n_ops > 0
+    t1, t2 = stream.materialize(), stream.materialize()
+    np.testing.assert_array_equal(t1.addrs, t2.addrs)
+    np.testing.assert_array_equal(t1.kinds, t2.kinds)
+
+    cfg = scheduler_pool_config(arch, 4, 32, 8)
+    s = Scheduler(cfg, n_lanes=4, max_seq=32, fault_plan=plan)
+    events = list(s.run(reqs))
+    comp = sorted(c.request.rid for e in events for c in e.completed)
+    assert comp == [0, 1, 2, 3, 4, 5]                     # nobody dropped
+    n_dead = len(s.dead_banks)
+    # no page leaks: free pool == everything minus dead banks and scratch
+    assert s.pool.n_free == (s.pool.free.size
+                             - n_dead * s.pool.free.shape[1] - 1)
+    whats = [t.meta.get("what") for e in events for t in e.traces]
+    if any(e.kind == "bank_offline" for e in plan):
+        assert "sched_decode_degraded" in whats
+    st = s.stats()["faults"]
+    assert st["degraded"] == (n_dead > 0)
+    assert st["dead_banks"] == list(s.dead_banks)
+
+
+def test_scheduler_state_roundtrips_and_resumes_identically():
+    """A mid-day ``state_dict`` is pure JSON, and a fresh scheduler loaded
+    from it finishes the day — remaining faults included — emitting the
+    same traces and completions as the original."""
+    cfg = scheduler_pool_config("16B-xor", 4, 32, 8)
+    s1 = Scheduler(cfg, n_lanes=4, max_seq=32, fault_plan=CHAOS_PLAN)
+    s1.submit(_requests(tokens=False))
+    for _ in range(4):
+        s1.tick()
+    blob = json.dumps(s1.state_dict())
+    assert json.loads(blob) == s1.state_dict()            # JSON-stable
+    s2 = Scheduler(cfg, n_lanes=4, max_seq=32, fault_plan=CHAOS_PLAN)
+    s2.load_state(json.loads(blob))
+
+    def finish(s):
+        evs = []
+        while not s.done():
+            evs.append(s.tick())
+        return evs
+
+    e1, e2 = finish(s1), finish(s2)
+    assert ([c.request.rid for e in e1 for c in e.completed]
+            == [c.request.rid for e in e2 for c in e.completed])
+    t1 = AddressTrace.concat(*[t for e in e1 for t in e.traces])
+    t2 = AddressTrace.concat(*[t for e in e2 for t in e.traces])
+    np.testing.assert_array_equal(t1.addrs, t2.addrs)
+    np.testing.assert_array_equal(t1.kinds, t2.kinds)
+    assert s1.pool.n_free == s2.pool.n_free
+    assert s1.stats()["faults"] == s2.stats()["faults"]
+
+
+def test_scheduler_load_state_rejects_mismatched_shapes():
+    cfg = scheduler_pool_config("16B", 4, 32, 8)
+    s = Scheduler(cfg, n_lanes=4, max_seq=32)
+    sd = s.state_dict()
+    with pytest.raises(ValueError, match="lanes"):
+        Scheduler(cfg, n_lanes=8, max_seq=32).load_state(sd)
+    small = Scheduler(scheduler_pool_config("16B", 2, 16, 8), n_lanes=4,
+                      max_seq=16)
+    with pytest.raises(ValueError, match="pool"):
+        small.pool.load_state(sd["pool"])
+
+
+# -- watchdog in the scheduler -----------------------------------------------
+
+def test_watchdog_flags_straggler_decode_ticks():
+    """Scheduler.tick times each decode step through an injectable timer;
+    after the median settles, a 100x-slower tick is flagged, recorded in
+    ``stats()``, and the caller's callback still fires (chained)."""
+    clock = {"t": 0.0, "step": 0.1}
+
+    def timer():
+        t = clock["t"]
+        clock["t"] += clock["step"]
+        return t
+
+    hits = []
+    wd = StepWatchdog(threshold=3.0,
+                      on_straggler=lambda step, sec, med: hits.append(step))
+    s = Scheduler(scheduler_pool_config("16B", 2, 32, 8), n_lanes=2,
+                  max_seq=32, watchdog=wd, timer=timer)
+    s.submit([Request(0, 0, prompt_len=4, max_new_tokens=16)])
+    decoded = 0
+    while not s.done():
+        ev = s.tick()
+        if ev.decoded:
+            decoded += 1
+            if decoded == 10:
+                clock["step"] = 10.0          # every later tick is 100x
+    assert len(wd.times) == decoded           # only decode ticks observed
+    assert wd.stragglers == 5                 # ticks 11..15
+    st = s.stats()
+    assert st["stragglers"] == 5
+    assert st["straggler_ticks"] == hits and len(hits) == 5
+
+
+def test_scheduler_without_watchdog_reports_no_straggler_stats():
+    s = Scheduler(scheduler_pool_config("16B", 2, 32, 8), n_lanes=2,
+                  max_seq=32)
+    list(s.run([Request(0, 0, prompt_len=4, max_new_tokens=3)]))
+    assert "stragglers" not in s.stats()
+
+
+# -- retry_step hardening ----------------------------------------------------
+
+def test_retry_jitter_is_deterministic_per_seed():
+    def run():
+        sleeps, calls = [], {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise RuntimeError("transient")
+            return "ok"
+
+        out = retry_step(flaky, retries=4, backoff=0.1, jitter=0.5, seed=7,
+                         _sleep=sleeps.append)
+        return out, sleeps
+
+    o1, s1 = run()
+    o2, s2 = run()
+    assert o1 == o2 == "ok"
+    assert s1 == s2 and len(s1) == 2          # same schedule, same seed
+    assert 0.1 < s1[0] < 0.15                 # jitter scaled into [1, 1.5)x
+    assert 0.2 < s1[1] < 0.3
+
+
+def test_retry_jitter_seed_changes_schedule():
+    def sleeps_for(seed):
+        out, calls = [], {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise RuntimeError("transient")
+            return 1
+
+        retry_step(flaky, retries=4, backoff=0.1, jitter=0.5, seed=seed,
+                   _sleep=out.append)
+        return out
+
+    assert sleeps_for(7) != sleeps_for(8)
+
+
+def test_retry_max_elapsed_caps_the_budget():
+    """With backoff 1s doubling and a 3s budget, attempts run at t=0, 1, 3
+    and the 4s sleep that would follow busts the cap: exactly 3 calls even
+    though 11 were allowed."""
+    clock = {"t": 0.0}
+    calls = {"n": 0}
+
+    def always_fails():
+        calls["n"] += 1
+        raise RuntimeError("persistent")
+
+    with pytest.raises(RuntimeError, match="persistent"):
+        retry_step(always_fails, retries=10, backoff=1.0, max_elapsed=3.0,
+                   _sleep=lambda d: clock.__setitem__("t", clock["t"] + d),
+                   _clock=lambda: clock["t"])
+    assert calls["n"] == 3
+
+
+# -- restore_checkpoint validation -------------------------------------------
+
+def test_restore_rejects_shape_dtype_and_structure_mismatch(tmp_path):
+    state = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+             "b": jnp.zeros(3, jnp.int32)}
+    save_checkpoint(str(tmp_path), 1, state)
+    with pytest.raises(ValueError, match="disagree"):
+        restore_checkpoint(str(tmp_path), 1, {"w": state["w"]})
+    with pytest.raises(ValueError, match="template shape"):
+        restore_checkpoint(str(tmp_path), 1,
+                           {"w": jnp.zeros((3, 2), jnp.float32),
+                            "b": state["b"]})
+    with pytest.raises(ValueError, match="template dtype"):
+        restore_checkpoint(str(tmp_path), 1,
+                           {"w": state["w"], "b": jnp.zeros(3, jnp.float32)})
+    back = restore_checkpoint(str(tmp_path), 1, state)   # clean template
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_restore_roundtrips_bfloat16_pools(tmp_path):
+    """npz stores ml_dtypes extension dtypes as raw void bytes; restore
+    must reinterpret them via the manifest dtype (the serving KV pools are
+    bfloat16 — this is the preemption-resume data path)."""
+    state = {"p": jnp.linspace(-2.0, 2.0, 16, dtype=jnp.bfloat16)}
+    save_checkpoint(str(tmp_path), 2, state)
+    back = restore_checkpoint(str(tmp_path), 2, state)
+    assert back["p"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back["p"], np.float32),
+                                  np.asarray(state["p"], np.float32))
+
+
+def test_checkpoint_aux_sidecar_roundtrip(tmp_path):
+    state = {"x": jnp.zeros(2)}
+    save_checkpoint(str(tmp_path), 3, state, aux={"sched": {"now": 4}})
+    assert load_aux(str(tmp_path), 3) == {"sched": {"now": 4}}
+    save_checkpoint(str(tmp_path), 4, state)
+    assert load_aux(str(tmp_path), 4) is None
+
+
+# -- the live engine under faults --------------------------------------------
+
+@pytest.fixture(scope="module")
+def eng():
+    return ServeEngine(CFG, RC, PARAMS, NO_AXES, max_batch=4, max_seq=32,
+                       page_len=8, kv_mode="paged", mem_arch="16B-xor")
+
+
+@pytest.fixture(scope="module")
+def baseline(eng):
+    """The uninterrupted day's outputs — what every faulted run is pinned
+    against."""
+    res = eng.run_scheduler(_requests())
+    return {rid: np.asarray(v).copy() for rid, v in res.outputs.items()}
+
+
+def test_live_chaos_day_is_token_pinned_and_bit_equal_to_sim(eng, baseline):
+    """The tentpole acceptance pin: a day with a bank loss, an ECC page
+    corruption and transient decode faults completes every request with
+    tokens identical to the healthy run, and its recorded trace — fault
+    migration burst, re-prefill, degraded decode blocks and all — is
+    bit-equal to the model-free simulated replay of the same plan."""
+    reqs = _requests()
+    res = eng.run_scheduler(reqs, fault_plan=CHAOS_PLAN)
+    assert not res.preempted
+    for r in reqs:
+        np.testing.assert_array_equal(res.outputs[r.rid], baseline[r.rid])
+    f = res.stats["faults"]
+    assert f["dead_banks"] == [1] and f["degraded"]
+    assert f["recoveries"] == 1 and f["transients"] == 2
+    assert f["migrated_pages"] > 0
+
+    live = eng.scheduler_stream()
+    rep = validate(live, arch=eng.mem_arch.name, block_ops=64)
+    assert rep.ok, rep.violations
+    lt = live.materialize()
+    sim = simulate_scheduler_stream(
+        eng.mem_arch, reqs, n_lanes=4, max_seq=32, page_len=8,
+        n_kv_layers=eng.n_kv_layers, fault_plan=CHAOS_PLAN).materialize()
+    np.testing.assert_array_equal(lt.addrs, sim.addrs)
+    np.testing.assert_array_equal(lt.kinds, sim.kinds)
+    np.testing.assert_array_equal(lt.instr, sim.instr)
+    np.testing.assert_array_equal(np.asarray(lt.mask), np.asarray(sim.mask))
+    # the degraded variant prices the same day at >= the healthy arch
+    deg = eng.mem_arch.degrade((1,))
+    assert deg.cost(lt).total_cycles >= eng.mem_arch.cost(lt).total_cycles
+
+
+def test_live_preemption_checkpoint_resume_is_pinned(eng, baseline,
+                                                     tmp_path):
+    """Preempt mid-day, checkpoint, resume in a second call: the merged
+    outputs equal the uninterrupted run and the two halves' traces
+    concatenate to the full simulated day."""
+    reqs = _requests()
+    plan = FaultPlan((FaultEvent(tick=4, kind="preempt"),))
+    ck = str(tmp_path / "ck")
+    part1 = eng.run_scheduler(reqs, fault_plan=plan, checkpoint_dir=ck)
+    assert part1.preempted and part1.checkpoint is not None
+    assert latest_step(ck) is not None
+    tr1 = eng.scheduler_stream().materialize()
+    part2 = eng.run_scheduler(None, fault_plan=plan, resume_from=ck)
+    assert not part2.preempted
+    for r in reqs:
+        np.testing.assert_array_equal(part2.outputs[r.rid], baseline[r.rid])
+    tr2 = eng.scheduler_stream().materialize()
+    full = simulate_scheduler_stream(
+        eng.mem_arch, reqs, n_lanes=4, max_seq=32, page_len=8,
+        n_kv_layers=eng.n_kv_layers, fault_plan=plan).materialize()
+    cat = AddressTrace.concat(tr1, tr2)
+    np.testing.assert_array_equal(cat.addrs, full.addrs)
+    np.testing.assert_array_equal(cat.kinds, full.kinds)
+    np.testing.assert_array_equal(cat.instr, full.instr)
+
+
+def test_preemption_without_checkpoint_dir_raises(eng):
+    plan = FaultPlan((FaultEvent(tick=4, kind="preempt"),))
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        eng.run_scheduler(_requests(), fault_plan=plan)
+
+
+def test_resume_rejects_fresh_requests_and_empty_dirs(eng, tmp_path):
+    with pytest.raises(ValueError, match="resum"):
+        eng.run_scheduler(_requests(), resume_from=str(tmp_path))
+    with pytest.raises(ValueError, match="checkpoint"):
+        eng.run_scheduler(None, resume_from=str(tmp_path / "nothing"))
