@@ -24,13 +24,24 @@ iterator — one block alive at a time), with host peak memory measured via
 whose peak stays below the (ops × 16) int32 matrix it never builds.
 Results go to ``BENCH_cost.json`` at the repo root.
 
+Two PIPELINE sections cover the engine's go-fast paths: ``pipelined_*``
+prices a latency-bound ``TraceStream.from_thunks`` stream serially vs with
+``prefetch=`` workers (overlapped block construction), and ``warm_cache_*``
+re-prices a rolling window that shares 90% of its blocks with the previous
+one through a seeded ``BlockCostCache`` vs an all-miss cold pass.
+
 CSV: name,us_per_call,derived (speedups | cycles checksum).
 ``--smoke`` runs the small points only (CI); ``--check`` exits non-zero if
 the batched path is not at least ``CHECK_SPEEDUP``× the loop anywhere (a
 soft perf-regression guard; the threshold is generous to absorb CI noise),
-if any path is not bit-equal — including streamed vs dense CONSTRUCTION —
-or if a peak-gated construction row materialized more than the dense
-matrix it claims to avoid.
+if the pipelined path is under ``PIPELINE_SPEEDUP``× serial on the
+latency-bound stream, if the seeded-cache re-price is under
+``WARM_CACHE_SPEEDUP``× the cold pass, if any path is not bit-equal —
+including streamed vs dense CONSTRUCTION — if ANY construction row's
+streamed peak reaches ``max(dense_matrix_bytes, PEAK_FLOOR_BYTES)`` (every
+row is peak-gated now; the explicit floor is what keeps small traces,
+whose dense matrix is below a few in-flight blocks, honestly gated), or if
+a recorded throughput falls below its ``OPS_PER_S_FLOORS`` floor.
 """
 from __future__ import annotations
 
@@ -40,12 +51,14 @@ import sys
 import time
 import tracemalloc
 
+import numpy as np
+
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from repro.bench import fft_workload, serving_workload, transpose_workload
 from repro.core import arch as _arch
-from repro.core.cost_engine import cost_many
-from repro.core.trace import TraceStream
+from repro.core.cost_engine import BlockCostCache, cost_many
+from repro.core.trace import AddressTrace, TraceStream
 from repro.tune.search import PAPER_SPACE
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -55,6 +68,24 @@ OUT_JSON = os.path.join(ROOT, "BENCH_cost.json")
 ARCH_NAMES = tuple(PAPER_SPACE.names())
 STREAM_BLOCK_OPS = 4096
 CHECK_SPEEDUP = 2.0       # CI gate; the acceptance target on transpose is 10x
+PIPELINE_SPEEDUP = 2.0    # prefetch pipeline vs serial, latency-bound stream
+WARM_CACHE_SPEEDUP = 5.0  # seeded BlockCostCache vs all-miss, 90%-shared window
+#: a streamed build may hold a few blocks in flight (current block, pending
+#: coalesce, device staging) but never O(trace).  The explicit floor — a
+#: handful of block footprints (block_ops x 16 lanes x 4 B) — is what lets
+#: EVERY construction row gate honestly: small traces whose dense matrix is
+#: below a few blocks compare against the floor instead of being exempted
+#: (the pre-fix hole: rows under n=1024 carried ``peak_gated: false``).
+PEAK_FLOOR_BYTES = 8 * STREAM_BLOCK_OPS * 16 * 4
+#: throughput regression floors (ops/s), ~8x under values observed on the
+#: 1-core CI host — a gross-regression tripwire, not a tight benchmark
+OPS_PER_S_FLOORS = {
+    # smoke prices only 8 blocks here, so the first-call jit dominates the
+    # timing — the floor is set against THAT worst case, not the full run
+    "stream_synthetic_serving": ("ops_per_s", 2_000),
+    "construct_transpose256": ("stream_build_ops_per_s", 50_000),
+    "construct_transpose1024": ("stream_build_ops_per_s", 50_000),
+}
 
 
 def _timeit(fn, repeats: int = 5) -> float:
@@ -160,7 +191,9 @@ def bench_construction(n: int, with_dense: bool) -> dict:
     ``with_dense=False`` rows are the million-op class where the dense
     build is pointless to time — they record the streamed peak against
     ``dense_matrix_bytes``, the (ops × 16) int32 matrix that was never
-    materialized (``peak_gated`` rows fail --check if it ever is)."""
+    materialized.  Every row is ``peak_gated``: --check fails if the
+    streamed peak reaches ``max(dense_matrix_bytes, PEAK_FLOOR_BYTES)``
+    (the floor keeps small-trace rows gated instead of exempt)."""
     from repro.core.cost_engine import cost_many as _cm
     from repro.core.trace import TraceStream
     from repro.isa.programs.transpose import (iter_transpose_instrs,
@@ -193,7 +226,8 @@ def bench_construction(n: int, with_dense: bool) -> dict:
         "stream_peak_bytes": int(stream_peak),
         "stream_s": round(stream_s, 4),
         "stream_build_ops_per_s": int(n_ops / stream_s),
-        "peak_gated": n >= 1024,
+        "peak_gated": True,
+        "peak_floor_bytes": PEAK_FLOOR_BYTES,
         "total_cycles_16B": stream_cost.total_cycles,
     }
     if with_dense:
@@ -210,6 +244,108 @@ def bench_construction(n: int, with_dense: bool) -> dict:
     return row
 
 
+def _synthetic_block(i: int, n_ops: int = 512) -> AddressTrace:
+    """Deterministic distinct per-index block (content → distinct cache
+    digest); stride-varied addresses keep the conflict pattern non-trivial."""
+    addrs = ((np.arange(n_ops * 16, dtype=np.int64) * (2 * i + 3)) % 509
+             ).reshape(n_ops, 16).astype(np.int32)
+    return AddressTrace.from_ops(addrs, kind="load" if i % 2 == 0
+                                 else "store")
+
+
+def bench_pipelined(prefetch: int = 4, n_blocks: int = 8,
+                    lat_s: float = 0.006) -> dict:
+    """Overlapped block construction: a latency-bound thunk stream priced
+    serially vs through ``cost_many(..., prefetch=N)``.
+
+    Each thunk waits ``lat_s`` before yielding its pre-built block —
+    simulated construction latency standing in for an I/O-bound producer
+    (trace blocks decoded from disk, a live scheduler feed).  This CI host
+    has ONE core, so CPU-bound construction cannot speed up from threads;
+    the pipeline's win here is latency hiding (construction waits overlap
+    padding + device dispatch + each other), which is exactly the regime
+    the prefetch path targets.  Bit-equality with the serial pass is
+    asserted before timing; the ``--check`` gate is ``PIPELINE_SPEEDUP``×.
+    """
+    a16 = _arch.resolve("16B")
+    blocks = [_synthetic_block(i) for i in range(n_blocks)]
+
+    def stream():
+        def thunk(b):
+            def t():
+                time.sleep(lat_s)       # simulated construction latency
+                return b
+            return t
+        return TraceStream.from_thunks([thunk(b) for b in blocks])
+
+    serial = cost_many([a16], stream())
+    piped = cost_many([a16], stream(), prefetch=prefetch)
+    equal = piped == serial
+    serial_s = _timeit(lambda: cost_many([a16], stream()), repeats=3)
+    piped_s = _timeit(lambda: cost_many([a16], stream(), prefetch=prefetch),
+                      repeats=3)
+    return {
+        "workload": "pipelined_thunk_stream",
+        "n_blocks": n_blocks, "construct_lat_s": lat_s,
+        "prefetch": prefetch,
+        "serial_s": round(serial_s, 4), "pipelined_s": round(piped_s, 4),
+        "speedup_pipelined": round(serial_s / piped_s, 2),
+        "pipelined_bit_equal": bool(equal),
+        "total_cycles_16B": serial[0].total_cycles,
+    }
+
+
+def bench_warm_cache(archs, window: int = 20, slide: int = 2,
+                     block_n_ops: int = 2048) -> dict:
+    """Incremental re-pricing: a ``window``-block rolling window slides by
+    ``slide`` blocks (90% shared at the defaults) — ``tune.online``'s
+    steady state.  Cold = the slid window priced per-block through a FRESH
+    ``BlockCostCache`` (all miss); warm = through a cache seeded by the
+    previous window (``window - slide`` hits, only the new blocks touch
+    the device).  Same code path both sides, so the ratio isolates what
+    the cache saves.  Bit-equality cold==warm is asserted; the ``--check``
+    gate is ``WARM_CACHE_SPEEDUP``×.  Blocks are sized so device dispatch
+    (what a hit skips) dominates the content digest (what a hit pays)."""
+    blocks = [_synthetic_block(i, n_ops=block_n_ops)
+              for i in range(window + slide)]
+    prev = blocks[:window]          # the already-priced window
+    cur = blocks[slide:]            # slid: shares window-slide blocks
+
+    def price(cache):
+        return cost_many(archs, TraceStream(list(cur)), cache=cache)
+
+    cold = price(BlockCostCache())
+    seeded = BlockCostCache()
+    cost_many(archs, TraceStream(list(prev)), cache=seeded)
+    warm = price(seeded)
+    hits = seeded.stats["hits"]
+    equal = warm == cold
+
+    # the cache self-populates, so best-of-N must re-seed per repeat and
+    # time ONLY the window re-price (first warm pass: slide misses)
+    cold_s, warm_s = float("inf"), float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        price(BlockCostCache())
+        cold_s = min(cold_s, time.perf_counter() - t0)
+        c = BlockCostCache()
+        cost_many(archs, TraceStream(list(prev)), cache=c)
+        t0 = time.perf_counter()
+        price(c)
+        warm_s = min(warm_s, time.perf_counter() - t0)
+    return {
+        "workload": "warm_cache_window",
+        "n_archs": len(archs), "window_blocks": window,
+        "shared_blocks": window - slide,
+        "cold_s": round(cold_s, 4), "warm_s": round(warm_s, 4),
+        "speedup_warm_cache": round(cold_s / warm_s, 2),
+        "warm_hits": int(hits),
+        "warm_bit_equal": bool(equal),
+        "total_cycles_16B": cold[[a.name for a in archs].index(
+            "16B")].total_cycles,
+    }
+
+
 def _construction_rows(smoke: bool) -> list:
     out = [bench_construction(256, with_dense=True),
            bench_construction(1024, with_dense=True)]
@@ -223,6 +359,11 @@ def rows(smoke: bool = False) -> list:
     archs = [_arch.resolve(n) for n in ARCH_NAMES]
     out = [bench_case(name, trace, archs) for name, trace in _cases(smoke)]
     out.append(bench_million_op_stream(archs, smoke))
+    out.append(bench_pipelined())
+    # warm-cache gate prices the FULL registry (paper lattice + the
+    # non-pow2 / two-level extension) — the online tuner's candidate list
+    out.append(bench_warm_cache([_arch.resolve(n)
+                                 for n in sorted(_arch.names())]))
     out.extend(_construction_rows(smoke))
     return out
 
@@ -241,12 +382,41 @@ def check(results: list) -> list:
             failures.append(
                 f"{r['workload']}: streamed construction not bit-equal to "
                 f"the dense build")
-        if r.get("peak_gated") and (r["stream_peak_bytes"]
-                                    >= r["dense_matrix_bytes"]):
+        if "speedup_pipelined" in r:
+            if r["speedup_pipelined"] < PIPELINE_SPEEDUP:
+                failures.append(
+                    f"{r['workload']}: prefetch pipeline only "
+                    f"{r['speedup_pipelined']}x serial on the latency-bound "
+                    f"stream (< {PIPELINE_SPEEDUP}x)")
+            if r.get("pipelined_bit_equal") is False:
+                failures.append(
+                    f"{r['workload']}: pipelined pass not bit-equal to "
+                    f"serial")
+        if "speedup_warm_cache" in r:
+            if r["speedup_warm_cache"] < WARM_CACHE_SPEEDUP:
+                failures.append(
+                    f"{r['workload']}: seeded-cache re-price only "
+                    f"{r['speedup_warm_cache']}x the all-miss pass "
+                    f"(< {WARM_CACHE_SPEEDUP}x on a "
+                    f"{r['shared_blocks']}/{r['window_blocks']}-shared "
+                    f"window)")
+            if r.get("warm_bit_equal") is False:
+                failures.append(
+                    f"{r['workload']}: warm re-price not bit-equal to cold")
+        if r.get("peak_gated"):
+            cap = max(r["dense_matrix_bytes"],
+                      r.get("peak_floor_bytes", PEAK_FLOOR_BYTES))
+            if r["stream_peak_bytes"] >= cap:
+                failures.append(
+                    f"{r['workload']}: streamed construction peaked at "
+                    f"{r['stream_peak_bytes']} B >= "
+                    f"max(dense {r['dense_matrix_bytes']} B, floor "
+                    f"{PEAK_FLOOR_BYTES} B) — it must stay O(block)")
+        floor = OPS_PER_S_FLOORS.get(r["workload"])
+        if floor is not None and r.get(floor[0], floor[1]) < floor[1]:
             failures.append(
-                f"{r['workload']}: streamed construction peaked at "
-                f"{r['stream_peak_bytes']} B >= the {r['dense_matrix_bytes']}"
-                f" B dense (ops x 16) matrix it must never materialize")
+                f"{r['workload']}: {floor[0]}={r[floor[0]]} under the "
+                f"{floor[1]} ops/s regression floor")
     return failures
 
 
@@ -260,7 +430,15 @@ def main(argv=None) -> None:
         us = round(r.get("cost_many_s", r.get("stream_s", 0.0)) * 1e6, 1)
         print(f"cost_{r['workload']},{us},{extra}")
     payload = {"archs": list(ARCH_NAMES), "smoke": smoke,
-               "block_ops": STREAM_BLOCK_OPS, "results": results}
+               "block_ops": STREAM_BLOCK_OPS,
+               "gates": {"batched_speedup": CHECK_SPEEDUP,
+                         "pipelined_speedup": PIPELINE_SPEEDUP,
+                         "warm_cache_speedup": WARM_CACHE_SPEEDUP,
+                         "peak_floor_bytes": PEAK_FLOOR_BYTES,
+                         "ops_per_s_floors": {
+                             k: {"field": f, "floor": v}
+                             for k, (f, v) in OPS_PER_S_FLOORS.items()}},
+               "results": results}
     with open(OUT_JSON, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
@@ -271,8 +449,10 @@ def main(argv=None) -> None:
             for msg in failures:
                 print(f"# CHECK FAILED: {msg}", file=sys.stderr)
             raise SystemExit(1)
-        print(f"# check OK: batched >= {CHECK_SPEEDUP}x loop everywhere, "
-              f"bit-equal")
+        print(f"# check OK: batched >= {CHECK_SPEEDUP}x loop, pipelined >= "
+              f"{PIPELINE_SPEEDUP}x serial, warm cache >= "
+              f"{WARM_CACHE_SPEEDUP}x cold, peaks O(block), floors held, "
+              f"all bit-equal")
 
 
 if __name__ == "__main__":

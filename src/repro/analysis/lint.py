@@ -15,7 +15,17 @@ Static (AST) checks over library code:
     ``TraceStream(iter(...))``: the stream then supports a single pass, and
     every pre-guard call site that priced a second pass priced 0 cycles.
     Pass the generator FUNCTION (a zero-arg callable) for a re-iterable
-    stream.
+    stream.  Deliberately single-pass streams (the prefetch pipeline in
+    ``cost_engine`` — a pool of in-flight construction futures cannot be
+    rewound) carry a ``# lint: allow-one-shot-stream`` waiver.
+  * **REPRO006 per-block-re-lowering** — ``lower_archs(...)`` or
+    ``cost_many(...)`` called inside a ``for`` loop iterating a trace's
+    ``.blocks(...)`` / ``.iter_blocks(...)``: the arch-table lowering (and
+    a full engine entry) is re-done O(blocks) times when one hoisted call
+    — or ``cost_many`` over the stream itself — prices everything in one
+    pass.  This is the exact anti-pattern the streaming engine exists to
+    remove; a deliberate per-block call (e.g. a bench that measures that
+    overhead) carries a ``# lint: allow-per-block-lowering`` waiver.
   * **REPRO005 swallowed-exception** — a bare ``except:`` clause, or an
     ``except`` whose entire body is ``pass``/``...``: in a fault-tolerant
     serving stack (``repro.runtime.faults``) a silently eaten error turns a
@@ -41,7 +51,7 @@ Runtime registry checks (cheap imports, no jax tracing):
     same spec, or string-keyed caching (``bench.run_cells`` lowering keys,
     ``tune.search`` results) would silently alias distinct architectures.
 
-``python -m repro.analysis --lint src`` runs all four (the CI
+``python -m repro.analysis --lint src`` runs every check (the CI
 ``lint-and-prove`` step); findings are returned as data so tests can pin
 both the positives and the waivers.
 """
@@ -56,6 +66,8 @@ __all__ = ["Finding", "lint_file", "lint_paths", "registry_findings",
 
 _WAIVER = "lint: allow-materialize"
 _WAIVER_SILENT = "lint: allow-silent-except"
+_WAIVER_ONE_SHOT = "lint: allow-one-shot-stream"
+_WAIVER_PER_BLOCK = "lint: allow-per-block-lowering"
 
 
 @dataclass(frozen=True)
@@ -130,6 +142,7 @@ def lint_file(path, source: str | None = None) -> list:
     lines = src.splitlines()
     gens = _generator_names(tree)
     findings = []
+    seen_per_block: set = set()     # REPRO006 dedup across nested For nodes
     for node in ast.walk(tree):
         # REPRO005: bare except / except body that swallows the error
         if isinstance(node, ast.ExceptHandler):
@@ -149,6 +162,37 @@ def lint_file(path, source: str | None = None) -> list:
                     "a silently eaten error turns a recoverable fault into "
                     "wrong results; handle or re-raise it, or waive a "
                     f"deliberate suppression with `# {_WAIVER_SILENT}`"))
+            continue
+        # REPRO006: lower_archs/cost_many re-done per block inside a
+        # streaming loop (for ... in <trace>.blocks(...)/.iter_blocks(...))
+        if isinstance(node, ast.For):
+            it = node.iter
+            g = it.func if isinstance(it, ast.Call) else None
+            if isinstance(g, ast.Attribute) and g.attr in ("blocks",
+                                                           "iter_blocks"):
+                for sub in ast.walk(node):
+                    if not isinstance(sub, ast.Call):
+                        continue
+                    h = sub.func
+                    callee = (h.id if isinstance(h, ast.Name)
+                              else h.attr if isinstance(h, ast.Attribute)
+                              else None)
+                    if callee not in ("lower_archs", "cost_many"):
+                        continue
+                    where = (str(p), sub.lineno)
+                    if where in seen_per_block or _waived(
+                            lines, sub.lineno, sub.end_lineno or sub.lineno,
+                            _WAIVER_PER_BLOCK):
+                        continue
+                    seen_per_block.add(where)
+                    findings.append(Finding(
+                        "REPRO006", str(p), sub.lineno,
+                        f"{callee}() inside a loop over .{g.attr}() — the "
+                        f"arch lowering / engine entry is repeated "
+                        f"O(blocks) times; hoist it above the loop (lower "
+                        f"once, or cost_many the stream itself), or waive "
+                        f"a deliberate per-block call with "
+                        f"`# {_WAIVER_PER_BLOCK}`"))
             continue
         if not isinstance(node, ast.Call):
             continue
@@ -174,13 +218,17 @@ def lint_file(path, source: str | None = None) -> list:
                     one_shot = "iter(...)"
                 elif isinstance(g, ast.Name) and g.id in gens:
                     one_shot = f"generator {g.id}()"
-            if one_shot:
+            if one_shot and not _waived(lines, node.lineno,
+                                        node.end_lineno or node.lineno,
+                                        _WAIVER_ONE_SHOT):
                 findings.append(Finding(
                     "REPRO002", str(p), node.lineno,
                     f"TraceStream fed a one-shot iterator ({one_shot}) — "
                     f"the stream supports a single pass and a second "
                     f"iteration raises; pass the generator FUNCTION "
-                    f"(zero-arg callable) for a re-iterable stream"))
+                    f"(zero-arg callable) for a re-iterable stream, or "
+                    f"waive a deliberately single-pass pipeline with "
+                    f"`# {_WAIVER_ONE_SHOT}`"))
     return findings
 
 

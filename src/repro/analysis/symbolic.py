@@ -14,11 +14,15 @@ set) and a fixed 16-entry lane-offset vector — exactly the shape of the
 paper's transpose/FFT address equations (the inner ``mod`` part exists for
 the FFT's twiddle index ``(q·i·step) mod n``).  The prover pushes families
 through the engine's own generic bank formula (``cost_engine._spec_paths``:
-``bank = (((a>>sh) ^ (a>>xsh)) + (a>>ash)) & (B-1)``) analytically:
+``bank = (((a>>sh) ^ (a>>xsh)) + (a>>ash)) mod B``, plus
+``B·((a // G) mod O)`` for two-level macro hierarchies) analytically:
 
   * the bank of an address depends only on ``addr mod M`` with
-    ``M = 2^(log2B + max real shift)`` — each ``(a>>s) & (B-1)`` term reads
-    bits ``[s, s+log2B)``, and XOR/ADD-mod-B both factor through ``mod M``;
+    ``M = B·2^(max real shift)`` (lcm'd with ``G·O`` for two-level) — each
+    ``(a>>s) mod B`` term is determined by ``a mod B·2^s``, XOR/ADD both
+    factor through ``mod M``, and so does the macro term through
+    ``mod G·O``; non-power-of-two B and hierarchical maps prove through
+    the same residue argument (see ``_bank_modulus``);
   * the base sum's residues mod M are counted by a per-term cyclic DP
     (``coeff·x mod M`` is periodic with period ``M / gcd(coeff, M)``;
     multi-index terms combine by cyclic convolution), so a million-op
@@ -187,13 +191,25 @@ def _residue_counts(const: int, terms, M: int) -> np.ndarray:
 
 
 def _bank_modulus(path) -> int:
-    """M = 2^(log2B + max real shift): the number of low address bits the
-    generic bank formula of this path can read (31 is the engine's
-    no-shift sentinel — those terms read nothing)."""
-    _, bmask, sh, xsh, ash, _, _ = (int(v) for v in path)
-    log2b = (bmask + 1).bit_length() - 1
+    """The modulus M the path's bank function factors through: bank(a)
+    depends only on ``a mod M``.
+
+    Single-level: ``M = B · 2^(max real shift)`` — each ``(a>>s) mod B``
+    term is determined by ``a mod B·2^s`` (write ``a = q·B·2^s + r``:
+    ``(a>>s) = q·B + (r>>s)`` exactly, since ``r < B·2^s`` splits cleanly
+    at bit s, and ``q·B`` vanishes mod B).  For power-of-two B this is the
+    historical ``2^(log2B + top)``; 31 is the engine's no-shift sentinel —
+    those terms read nothing.
+
+    Two-level adds the macro term ``(a // G) mod O``, which factors
+    through ``a mod G·O`` by the same split; the composite factors through
+    ``lcm`` of the two moduli."""
+    (_, nb, sh, xsh, ash, _, _, outb, outg) = (int(v) for v in path)
     top = max([s for s in (sh, xsh, ash) if s != 31], default=0)
-    return 1 << (log2b + top)
+    M = nb << top
+    if outb > 1:
+        M = math.lcm(M, outg * outb)
+    return M
 
 
 def _representatives(fam: AffineFamily, M: int) -> tuple:
@@ -230,11 +246,15 @@ def _first_occurrence_np(addrs: np.ndarray, active: np.ndarray) -> np.ndarray:
 
 def _op_cycles(reps: np.ndarray, active: np.ndarray, path) -> np.ndarray:
     """(N, LANES) representative addresses -> (N,) memory cycles per op
-    under one lowered path row [use_banked, bank_mask, sh, xsh, ash,
-    use_uniq, ports].  Banked conflicts come from a per-bank bincount (an
-    algorithm independent of the engine's lane-pair equality matrix, so the
-    cross-check compares two distinct computations)."""
-    use_banked, bmask, sh, xsh, ash, use_uniq, ports = (int(v) for v in path)
+    under one lowered path row [use_banked, n_banks, sh, xsh, ash,
+    use_uniq, ports, outer_banks, outer_granule].  Banked conflicts come
+    from a per-bank bincount (an algorithm independent of the engine's
+    lane-pair equality matrix, so the cross-check compares two distinct
+    computations).  Non-power-of-two bank counts use the ``% B`` form and
+    two-level rows add the macro term — both proved through the same
+    residue argument (see ``_bank_modulus``)."""
+    (use_banked, nb, sh, xsh, ash, use_uniq, ports,
+     outb, outg) = (int(v) for v in path)
     n = reps.shape[0]
     if not use_banked:
         return -(-active.sum(axis=-1) // ports)
@@ -243,8 +263,12 @@ def _op_cycles(reps: np.ndarray, active: np.ndarray, path) -> np.ndarray:
         eff = _first_occurrence_np(reps, active)
     M = _bank_modulus(path)
     a = reps % M                        # bank() factors through mod M
-    bank = (((a >> sh) ^ (a >> xsh)) + (a >> ash)) & bmask
-    n_banks = bmask + 1
+    raw = ((a >> sh) ^ (a >> xsh)) + (a >> ash)
+    bank = raw & (nb - 1) if nb & (nb - 1) == 0 else raw % nb
+    n_banks = nb
+    if outb > 1:
+        bank = bank + nb * ((a // outg) % outb)
+        n_banks = nb * outb
     flat = (bank + np.arange(n, dtype=np.int64)[:, None] * n_banks)[eff]
     counts = np.bincount(flat, minlength=n * n_banks).reshape(n, n_banks)
     return counts.max(axis=1)

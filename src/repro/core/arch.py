@@ -50,15 +50,21 @@ def bank_slot_of(r, n_banks: int, mapping: str = "lsb", shift: int = 1):
     mapped bits, the slot is the remaining bits re-packed densely.  For the
     offset map the bank bits live at ``[shift+log2B-1 : shift]``, so the slot
     keeps the ``shift`` low bits in place (I/Q pairs stay adjacent).
+
+    ``lsb`` and ``offset`` are modulo maps and take any bank count — the
+    slot uses ``// n_banks``, which XLA strength-reduces back to the shift
+    for power-of-two counts (bit-identical values either way); ``xor`` and
+    ``fold`` remain power-of-two only.
     """
-    log2b = _log2(n_banks)
     kw = {"shift": shift} if mapping == "offset" else {}
     bank = bank_of(r, n_banks, mapping, **kw)
     if mapping == "offset":
         low = r & ((1 << shift) - 1)
-        slot = ((r >> (log2b + shift)) << shift) | low
+        slot = (((r >> shift) // n_banks) << shift) | low
+    elif mapping == "lsb":
+        slot = r // n_banks
     else:
-        slot = r >> log2b
+        slot = r >> _log2(n_banks)
     return bank, slot
 
 
@@ -80,15 +86,15 @@ def logical_row_of(bank, slot, n_banks: int, mapping: str = "lsb",
     the cost model's bank maps (and the Pallas kernels' index maps) agree
     with (see repro/serving/kvcache.py).
     """
-    log2b = _log2(n_banks)
-    mask = n_banks - 1
     if mapping == "offset":
         low = slot & ((1 << shift) - 1)
         high = slot >> shift
-        return (high << (log2b + shift)) | (bank << shift) | low
+        return ((high * n_banks + bank) << shift) | low
     if mapping == "lsb":
-        lsb = bank & mask
-    elif mapping == "xor":
+        return slot * n_banks + bank
+    log2b = _log2(n_banks)
+    mask = n_banks - 1
+    if mapping == "xor":
         lsb = (bank ^ slot) & mask
     elif mapping == "fold":
         lsb = (bank - slot) & mask
@@ -111,7 +117,11 @@ class BankedLayout:
     shift: int = 1            # offset-map bank-bit position (paper: 1)
 
     def __post_init__(self):
-        _log2(self.n_banks)
+        if self.n_banks <= 0:
+            raise ValueError(f"bank count must be positive, got "
+                             f"{self.n_banks}")
+        if self.mapping in ("xor", "fold"):
+            _log2(self.n_banks)   # bit-mixing maps stay power-of-two
         if self.mapping not in BANK_MAPS:
             raise ValueError(
                 f"unknown bank map {self.mapping!r}; choose from {BANK_MAPS}")
@@ -340,6 +350,11 @@ class BankedMemory(MemoryArchitecture):
         return self.spec.broadcast
 
     @property
+    def total_banks(self) -> int:
+        """Flat bank count the arbiter sees (inner × outer for two-level)."""
+        return self.spec.total_banks
+
+    @property
     def layout(self) -> BankedLayout:
         return BankedLayout(self.n_banks, self.mapping, self.spec.map_shift)
 
@@ -354,18 +369,64 @@ class BankedMemory(MemoryArchitecture):
         addrs = jnp.asarray(addrs, jnp.int32)
         banks = self.banks_of(addrs)
         if self.broadcast and not is_write:
-            return max_conflicts_broadcast(addrs, banks, self.n_banks, mask)
-        return max_conflicts(banks, self.n_banks, mask)
+            return max_conflicts_broadcast(addrs, banks, self.total_banks,
+                                           mask)
+        return max_conflicts(banks, self.total_banks, mask)
 
     def _instruction_overhead(self, is_write: bool) -> int:
-        return (ctl.write_overhead(self.n_banks) if is_write
-                else ctl.read_overhead(self.n_banks))
+        return (ctl.write_overhead(self.total_banks) if is_write
+                else ctl.read_overhead(self.total_banks))
 
     def degrade(self, dead_banks) -> "DegradedBankedMemory":
         """This memory with ``dead_banks`` offline (fault-recovery pricing:
         ``repro.runtime.faults`` bank-offline events lower their degraded
         layout through the returned variant)."""
         return DegradedBankedMemory(self.spec, dead_banks)
+
+
+class TwoLevelBankedMemory(BankedMemory):
+    """Hierarchical two-level banked memory (eGPU-style multi-level shapes):
+    ``outer_banks`` memory macros × ``n_banks`` inner banks each.
+
+    The outer macro is selected by address granule —
+    ``outer = (addr // outer_granule) % outer_banks`` — and the inner bank
+    by the spec's ordinary bank map, so the flat bank id the carry-chain
+    arbiter sees is ``inner + n_banks · outer``.  With the default granule
+    (``= n_banks``, power-of-two, lsb map) the composite collapses to a
+    flat ``total_banks`` lsb memory — the conformance anchor the tests pin.
+    Named ``{O}x{I}B[-{mapping}][-g{G}]``.
+
+    The flat bank-major ``BankedLayout`` bijection does not apply to a
+    macro hierarchy, so ``layout`` is ``None`` (like the multi-port
+    memories); the paged-KV allocators fall back to their canonical pool.
+    """
+
+    def __init__(self, outer: int = 2, inner: int = 8,
+                 granule: int | None = None, mapping: str = "lsb",
+                 spec: MemSpec | None = None):
+        if spec is None:
+            from repro.core.memsim import two_level as _two_level_spec
+            spec = _two_level_spec(outer, inner, granule, mapping)
+        assert spec.is_two_level, spec
+        super().__init__(spec=spec)
+
+    @property
+    def outer_banks(self) -> int:
+        return self.spec.outer_banks
+
+    @property
+    def outer_granule(self) -> int:
+        return self.spec.outer_granule
+
+    @property
+    def layout(self) -> None:
+        return None
+
+    def banks_of(self, addrs: Array) -> Array:
+        addrs = jnp.asarray(addrs, jnp.int32)
+        inner = super().banks_of(addrs)
+        outer = (addrs // self.outer_granule) % self.outer_banks
+        return (inner + self.n_banks * outer).astype(jnp.int32)
 
 
 def surviving_bank_remap(n_banks: int, dead_banks) -> tuple:
@@ -415,7 +476,7 @@ class DegradedBankedMemory(BankedMemory):
             else:
                 dead = tuple(dead_banks or ())
             dead = tuple(sorted(set(int(d) for d in dead)))
-            surviving_bank_remap(base_spec.n_banks, dead)  # validates
+            surviving_bank_remap(base_spec.total_banks, dead)  # validates
             if not dead:
                 raise ValueError("degraded memory needs >= 1 dead bank")
             from dataclasses import replace
@@ -434,20 +495,30 @@ class DegradedBankedMemory(BankedMemory):
         """The healthy memory this variant degrades."""
         return from_spec(_base_of(self.spec))  # type: ignore[return-value]
 
+    @property
+    def layout(self) -> BankedLayout | None:
+        # page ids / kernel index maps are the healthy base's (None for a
+        # two-level base, which has no flat bank-major layout)
+        return self.base.layout
+
     def bank_remap(self) -> tuple:
-        return surviving_bank_remap(self.n_banks, self.dead_banks)
+        return surviving_bank_remap(self.total_banks, self.dead_banks)
 
     def banks_of(self, addrs: Array) -> Array:
+        # the HEALTHY base's map (two-level bases compose inner+outer here),
+        # then the surviving-neighbor remap over the flat bank ids
         remap = jnp.asarray(self.bank_remap(), jnp.int32)
-        return remap[super().banks_of(addrs)]
+        return remap[self.base.banks_of(addrs)]
 
 
 def _base_of(spec: MemSpec) -> MemSpec:
-    """A degraded spec's healthy base (identity for healthy specs)."""
+    """A degraded spec's healthy base (identity for healthy specs): strip
+    the dead banks and the ``!d`` name suffix, keep every other field —
+    works for any banked family (flat, non-pow2, two-level)."""
     if not spec.dead_banks:
         return spec
-    return _banked_spec(spec.n_banks, spec.mapping, spec.map_shift,
-                        spec.broadcast)
+    from dataclasses import replace
+    return replace(spec, dead_banks=(), name=spec.name.split("!d")[0])
 
 
 class MultiPortMemory(MemoryArchitecture):
@@ -500,6 +571,8 @@ def from_spec(spec: MemSpec) -> MemoryArchitecture:
     if spec.is_banked:
         if spec.dead_banks:
             return DegradedBankedMemory(spec, spec=spec)
+        if spec.is_two_level:
+            return TwoLevelBankedMemory(spec=spec)
         return BankedMemory(spec=spec)
     return MultiPortMemory(spec=spec)
 
@@ -513,8 +586,22 @@ _REGISTRY: dict[str, MemoryArchitecture] = {}
 _BANKED_NAME = re.compile(
     r"^(?P<banks>\d+)B(?:-(?P<mapping>[a-z]+))?(?:-s(?P<shift>\d+))?"
     r"(?P<bcast>-bcast)?$")
+_TWO_LEVEL_NAME = re.compile(
+    r"^(?P<outer>\d+)x(?P<inner>\d+)B(?:-(?P<mapping>[a-z]+))?"
+    r"(?:-g(?P<gran>\d+))?$")
 _MULTIPORT_NAME = re.compile(
     r"^(?P<r>\d+)R-(?P<w>\d+)W(?P<vb>-VB)?$")
+
+
+def _map_takes_banks(mapping: str, n_banks: int) -> bool:
+    """Whether ``mapping`` supports ``n_banks``: the modulo maps
+    (lsb/offset) take any positive count, the bit-mixing maps (xor/fold)
+    need a power of two."""
+    if n_banks <= 0:
+        return False
+    if mapping in ("lsb", "offset"):
+        return True
+    return n_banks & (n_banks - 1) == 0
 
 
 def register(arch: MemoryArchitecture,
@@ -535,8 +622,8 @@ def _parse(name: str) -> MemoryArchitecture | None:
                 isinstance(base, DegradedBankedMemory)):
             return None
         dead = tuple(int(d) for d in m.group("dead").split("+"))
-        if any(d >= base.n_banks for d in dead) or len(set(dead)) >= (
-                base.n_banks):
+        if any(d >= base.total_banks for d in dead) or len(set(dead)) >= (
+                base.total_banks):
             return None
         if list(dead) != sorted(set(dead)):
             return None                 # canonical order so names round-trip
@@ -544,17 +631,18 @@ def _parse(name: str) -> MemoryArchitecture | None:
     m = _BANKED_NAME.match(name)
     if m:
         banks = int(m.group("banks"))
-        if banks <= 0 or banks & (banks - 1):
-            # "3B"/"0B" match the name shape but aren't constructible;
-            # return None so get() raises its uniform KeyError instead of
-            # a bare ValueError escaping from the layout math
-            return None
         mapping = m.group("mapping") or "lsb"
         if mapping == "bcast":          # "16B-bcast" (lsb map + broadcast)
             mapping, bcast = "lsb", True
         else:
             bcast = bool(m.group("bcast"))
         if mapping not in BANK_MAPS:
+            return None
+        if not _map_takes_banks(mapping, banks):
+            # "0B", or a non-pow2 count under a bit-mixing map ("12B-xor"):
+            # the shape matches but the arch isn't constructible; return
+            # None so get() raises its uniform KeyError instead of a bare
+            # ValueError escaping from the layout math
             return None
         if m.group("shift") and mapping != "offset":
             # only the offset map has a shift; accepting "16B-s2" would
@@ -564,6 +652,20 @@ def _parse(name: str) -> MemoryArchitecture | None:
         return BankedMemory(banks, mapping,
                             shift=int(m.group("shift") or 1),
                             broadcast=bcast)
+    m = _TWO_LEVEL_NAME.match(name)
+    if m:
+        outer, inner = int(m.group("outer")), int(m.group("inner"))
+        mapping = m.group("mapping") or "lsb"
+        if outer < 2 or mapping not in BANK_MAPS:
+            return None
+        if not _map_takes_banks(mapping, inner):
+            return None
+        gran = int(m.group("gran")) if m.group("gran") else None
+        if gran is not None and (gran < 1 or gran == inner):
+            # "-g{inner}" is the default granule: the canonical name drops
+            # the suffix, so the explicit form must not mint an alias
+            return None
+        return TwoLevelBankedMemory(outer, inner, gran, mapping)
     m = _MULTIPORT_NAME.match(name)
     if m:
         if not int(m.group("r")) or not int(m.group("w")):
@@ -622,3 +724,25 @@ def _transpose_architectures() -> tuple[MemoryArchitecture, ...]:
 
 TRANSPOSE_ARCHITECTURES: tuple[MemoryArchitecture, ...] = (
     _transpose_architectures())
+
+#: Beyond-paper lattice points exercising the generalized bank formula:
+#: non-power-of-two modulo maps ("12B", "6B-offset") and hierarchical
+#: two-level macro×bank shapes ("4x4B-g64", "2x8B-g32", "4x3B" — the last
+#: with a non-pow2 inner level).  Registered so the arch-name round-trip
+#: lint (REPRO004) pins their naming and so sweeps can reference them by
+#: name; all of them price through the batched ``cost_many`` path — not
+#: the ``_cost_loop`` fallback (tests/test_cost_engine.py pins equality).
+def _register_extended_lattice() -> tuple[MemoryArchitecture, ...]:
+    from repro.core.memsim import two_level as _two_level_spec
+    specs = (
+        _banked_spec(12, "lsb"),
+        _banked_spec(6, "offset"),
+        _two_level_spec(4, 4, granule=64),
+        _two_level_spec(2, 8, granule=32),
+        _two_level_spec(4, 3),
+    )
+    return tuple(register(from_spec(s)) for s in specs)
+
+
+EXTENDED_LATTICE_ARCHITECTURES: tuple[MemoryArchitecture, ...] = (
+    _register_extended_lattice())

@@ -11,7 +11,10 @@ We additionally provide two beyond-paper maps used in the §Perf hillclimbs:
   * ``fold``   — bank = (addr + (addr >> log2(B))) & (B-1)  (diagonal skew)
 
 All maps are pure jnp, vectorized over arbitrary address-array shapes, and
-jit-safe.  Bank counts must be powers of two.
+jit-safe.  ``lsb`` and ``offset`` are pure modulo maps and accept ANY bank
+count (non-power-of-two lattice points use ``% B`` — for power-of-two B the
+two forms agree bit-for-bit on non-negative addresses); ``xor`` and ``fold``
+mix address *bits* and remain power-of-two only.
 """
 from __future__ import annotations
 
@@ -31,20 +34,31 @@ def _log2(n: int) -> int:
     return n.bit_length() - 1
 
 
+def _check_banks(n: int) -> None:
+    if n <= 0:
+        raise ValueError(f"bank count must be positive, got {n}")
+
+
 def lsb_map(addr: Array, n_banks: int) -> Array:
-    """bank = lower log2(B) bits of the word address."""
-    _log2(n_banks)
-    return (addr & (n_banks - 1)).astype(jnp.int32)
+    """bank = addr mod B (the lower log2(B) bits when B is a power of two)."""
+    _check_banks(n_banks)
+    if n_banks & (n_banks - 1) == 0:
+        return (addr & (n_banks - 1)).astype(jnp.int32)
+    return (addr % n_banks).astype(jnp.int32)
 
 
 def offset_map(addr: Array, n_banks: int, shift: int = 2) -> Array:
-    """The paper's Offset map: bank = addr[shift + log2(B) - 1 : shift].
+    """The paper's Offset map: bank = addr[shift + log2(B) - 1 : shift],
+    i.e. ``(addr >> shift) mod B`` — which is the form we use so non-pow2
+    bank counts work too.
 
     For a 16-bank system this uses address bits [5:2] rather than [3:0]
     (the paper's text says "[4:2]", a typo — 16 banks need 4 bits).
     """
-    _log2(n_banks)
-    return ((addr >> shift) & (n_banks - 1)).astype(jnp.int32)
+    _check_banks(n_banks)
+    if n_banks & (n_banks - 1) == 0:
+        return ((addr >> shift) & (n_banks - 1)).astype(jnp.int32)
+    return ((addr >> shift) % n_banks).astype(jnp.int32)
 
 
 def xor_map(addr: Array, n_banks: int) -> Array:

@@ -54,10 +54,30 @@ class MemSpec:
     #: ``()`` for healthy memories — the cost-engine lowering compiles the
     #: remap path only when a spec carries dead banks.
     dead_banks: tuple = ()
+    #: hierarchical two-level banking (eGPU-style multi-level memories,
+    #: arXiv:2307.08378): ``outer_banks`` memory macros, each holding
+    #: ``n_banks`` inner banks.  The outer level is selected by address
+    #: *granule*: ``outer = (addr // outer_granule) % outer_banks``; the
+    #: inner level applies the spec's ``mapping`` as usual.  The flat bank
+    #: id the arbiter sees is ``inner + n_banks * outer``.  ``0`` on both
+    #: fields means a single-level memory (the default everywhere).
+    outer_banks: int = 0
+    outer_granule: int = 0
 
     @property
     def is_banked(self) -> bool:
         return self.kind == "banked"
+
+    @property
+    def is_two_level(self) -> bool:
+        return self.kind == "banked" and self.outer_banks > 1
+
+    @property
+    def total_banks(self) -> int:
+        """Flat bank count the arbiter sees: inner × outer levels."""
+        if self.kind != "banked":
+            return 0
+        return self.n_banks * max(1, self.outer_banks)
 
 
 def banked(n_banks: int, mapping: str = "lsb", shift: int = 1,
@@ -81,6 +101,30 @@ def banked(n_banks: int, mapping: str = "lsb", shift: int = 1,
         suffix += "-bcast"
     return MemSpec(kind="banked", name=f"{n_banks}B{suffix}", n_banks=n_banks,
                    mapping=mapping, map_shift=shift, broadcast=broadcast)
+
+
+def two_level(outer: int, inner: int, granule: int | None = None,
+              mapping: str = "lsb") -> MemSpec:
+    """Hierarchical two-level banked memory: ``outer`` macros × ``inner``
+    banks each (eGPU-style multi-level shapes).  ``granule`` is the address
+    run (in words) that stays inside one macro before the outer map rotates
+    — default ``inner``, which for power-of-two ``inner`` with the lsb map
+    makes the composite identical to a flat ``outer*inner``-bank lsb memory
+    (the conformance anchor the tests pin).  Names: ``{O}x{I}B`` with a
+    ``-g{G}`` suffix for non-default granules and the usual ``-{mapping}``
+    suffix for non-lsb inner maps."""
+    if granule is None:
+        granule = inner
+    if outer < 2:
+        raise ValueError("two_level needs outer >= 2 (use banked() otherwise)")
+    if granule < 1:
+        raise ValueError("outer_granule must be >= 1")
+    suffix = "" if mapping == "lsb" else f"-{mapping}"
+    if granule != inner:
+        suffix += f"-g{granule}"
+    return MemSpec(kind="banked", name=f"{outer}x{inner}B{suffix}",
+                   n_banks=inner, mapping=mapping,
+                   outer_banks=outer, outer_granule=granule)
 
 
 def multiport(read_ports: int, write_ports: int, vb: bool = False) -> MemSpec:

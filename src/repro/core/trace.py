@@ -476,8 +476,50 @@ class TraceStream:
                 f"TraceStream needs an iterable of AddressTrace blocks "
                 f"or a zero-arg callable returning one, got {blocks!r}")
         self._blocks = blocks
+        self._thunks: tuple | None = None
         self._consumed = False
         self.meta = dict(meta or {})
+
+    @classmethod
+    def from_thunks(cls, thunks, meta: dict | None = None) -> "TraceStream":
+        """A stream whose source blocks are built by independent zero-arg
+        callables, one (or an iterable of blocks) per thunk, consumed in
+        thunk order.
+
+        Declaring the per-block construction work as separate thunks — not
+        one generator — is what lets ``cost_many(..., prefetch=N)`` fan
+        construction over a worker pool while the device prices earlier
+        blocks (generator-backed streams can only overlap on a single
+        producer thread, since a generator is inherently sequential).
+        Thunks must be independent: each may run on any thread, in any
+        order relative to the others.  Iterating the stream serially calls
+        them in order on the caller's thread, so the serial and prefetched
+        passes see the identical block sequence.
+        """
+        thunks = tuple(thunks)
+        for t in thunks:
+            if not callable(t):
+                raise TypeError(f"from_thunks needs zero-arg callables, "
+                                f"got {t!r}")
+
+        def gen():
+            for t in thunks:
+                out = t()
+                if isinstance(out, AddressTrace):
+                    yield out
+                else:
+                    yield from out
+
+        stream = cls(gen, meta=meta)
+        stream._thunks = thunks
+        return stream
+
+    @property
+    def thunks(self) -> tuple | None:
+        """The construction thunks when this stream was built by
+        ``from_thunks`` (the prefetch pipeline's parallelism handle),
+        else None."""
+        return self._thunks
 
     def __iter__(self):
         """Iterate the raw SOURCE blocks (local instruction ids); use

@@ -339,38 +339,61 @@ class ServeEngine:
         logits = T._unembed(cfg, params, x)
         return logits, pools
 
-    def _ingest_request(self, pools, prompt: np.ndarray, page_ids):
-        """Prefill ONE request and scatter its K/V prompt pages into the
-        shared pools at the scheduler-allocated ids (one jit compile per
-        distinct prompt length).  Returns the updated pools and the
-        request's first generated token id.  K/V slots past the prompt in
-        its last page stay zero; every decode mask is ``idx <= pos``, so a
-        stale slot is never read before the decode step that writes it."""
+    def _prefill_rows(self, prompt: np.ndarray):
+        """Prefill ONE request and lower its K/V to page rows: returns the
+        request's first generated token id and a per-pool dict of
+        ``(n_pref, row_width)`` row arrays — page ``k``'s row at index
+        ``k``, ready to scatter at whatever tick the scheduler lands that
+        page (whole-prompt admission scatters all rows at once; chunked
+        prefill scatters slices as ``ev.prefill_chunks`` records arrive).
+        One jit compile per distinct prompt length.  K/V slots past the
+        prompt in its last page stay zero; every decode mask is
+        ``idx <= pos``, so a stale slot is never read before the decode
+        step that writes it."""
         kv = self.kv_cfg
         plen = int(prompt.shape[0])
         n_pref = -(-plen // kv.page_len)
         logits, cache = self._prefill(self.params, jnp.asarray(prompt)[None])
         first = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
-        ids = jnp.asarray(np.asarray(page_ids, np.int32))
 
-        def write(pool, kc):
+        def rows_of(kc):
             # kc: (1, t, KV, HD) with t ≤ plen (SWA keeps only the window)
             t = kc.shape[1]
             buf = jnp.zeros((1, n_pref * kv.page_len) + kc.shape[2:],
                             kc.dtype)
             buf = buf.at[:, plen - t:plen].set(kc)
-            rows = buf.reshape(n_pref, kv.row_width)
-            return KV.scatter_pages(self.mem_arch, kv, pool, ids, rows,
-                                    interpret=self.kernel_interpret)
+            return buf.reshape(n_pref, kv.row_width)
 
-        pools = dict(pools)
+        rows = {}
         for j, (kind, _) in enumerate(self.cfg.block_pattern()):
             bc = cache["blocks"][f"b{j}"]
             for sb in range(self.cfg.n_superblocks):
-                key = f"b{j}s{sb}"
-                pools[key] = {"k": write(pools[key]["k"], bc["k"][sb]),
-                              "v": write(pools[key]["v"], bc["v"][sb])}
-        return pools, first
+                rows[f"b{j}s{sb}"] = {"k": rows_of(bc["k"][sb]),
+                                      "v": rows_of(bc["v"][sb])}
+        return first, rows
+
+    def _scatter_rows(self, pools, rows, page_ids, page_start: int = 0):
+        """Scatter one contiguous slice of held prefill rows into every
+        pool at the scheduler-allocated ids — the live half of a prefill
+        chunk (or, with ``page_start=0`` and all ids, of a whole-prompt
+        admission)."""
+        ids = jnp.asarray(np.asarray(page_ids, np.int32))
+        n = int(ids.shape[0])
+        pools = dict(pools)
+        for key, pair in rows.items():
+            pools[key] = {
+                h: KV.scatter_pages(
+                    self.mem_arch, self.kv_cfg, pools[key][h], ids,
+                    pair[h][page_start:page_start + n],
+                    interpret=self.kernel_interpret)
+                for h in ("k", "v")}
+        return pools
+
+    def _ingest_request(self, pools, prompt: np.ndarray, page_ids):
+        """Whole-prompt admission: prefill and scatter every prompt page
+        at once.  Returns the updated pools and the first token id."""
+        first, rows = self._prefill_rows(prompt)
+        return self._scatter_rows(pools, rows, page_ids), first
 
     def _migrate_pages(self, pools, old_ids, new_ids):
         """Evacuate a dying bank's live pages: gather each page's row from
@@ -431,7 +454,8 @@ class ServeEngine:
 
     def run_scheduler(self, requests, policy="seq-skew", scheduler=None,
                       fault_plan=None, guard=None, checkpoint_dir=None,
-                      resume_from=None) -> SchedulerRunResult:
+                      resume_from=None,
+                      prefill_chunk_pages=None) -> SchedulerRunResult:
         """Continuous-batching generation: drive real lane-ragged decode
         steps from ``scheduler.Scheduler`` (greedy sampling).
 
@@ -441,6 +465,12 @@ class ServeEngine:
         jit'd step — so the recorded live trace (``scheduler_stream()``) is
         bit-equal to ``scheduler.simulate_scheduler_stream`` on the same
         traffic by construction (pinned in tests/test_scheduler.py).
+
+        ``prefill_chunk_pages=N`` enables chunked prefill: the prompt's
+        K/V rows are computed once at admission, HELD, and scattered chunk
+        by chunk as the scheduler's ``ev.prefill_chunks`` records land the
+        pages — other lanes keep decoding between chunks, and live == sim
+        stays bit-equal across every chunk boundary.
 
         Requests need prompt ``tokens``; admission order, page placement
         and completion order are exactly the simulation's.  The live path
@@ -475,7 +505,7 @@ class ServeEngine:
         sched = scheduler or Scheduler(
             self.kv_cfg, n_lanes=self.max_batch, max_seq=self.max_seq,
             policy=policy, n_kv_layers=self.n_kv_layers,
-            fault_plan=fault_plan)
+            fault_plan=fault_plan, prefill_chunk_pages=prefill_chunk_pages)
         dtype = jnp.dtype(self.rc.compute_dtype)
         pools = {}
         for j, (kind, _) in enumerate(self.cfg.block_pattern()):
@@ -488,6 +518,9 @@ class ServeEngine:
         lane_rid = np.full(self.max_batch, -1, np.int64)
         toks: dict[int, list] = {}
         outputs: dict[int, np.ndarray] = {}
+        #: held prefill rows of lanes mid-chunked-prefill
+        #: (lane -> per-pool row arrays; see ``_prefill_rows``)
+        pending: dict[int, dict] = {}
         if resume_from is not None:
             step = latest_step(resume_from)
             if step is None:
@@ -507,6 +540,15 @@ class ServeEngine:
             outputs = {int(k): np.asarray(v, np.int32)
                        for k, v in aux["outputs"].items()}
             lane_rid = np.asarray(aux["lane_rid"], np.int64)
+            # lanes checkpointed mid-chunked-prefill: their landed chunks
+            # are inside the restored pools; recompute the held rows from
+            # the request tokens (prefill is deterministic, so the rows the
+            # remaining chunks scatter are identical to an uninterrupted
+            # run's)
+            for lane in sched._prefill_next:
+                r = sched._by_rid[int(sched.lane_rid[lane])]
+                _, pending[lane] = self._prefill_rows(
+                    np.asarray(r.tokens, np.int32))
         self._sched_traces = []
         preempted, ckpt_path = False, None
         for ev in sched.run(requests):
@@ -522,17 +564,31 @@ class ServeEngine:
                 outputs[c.request.rid] = np.asarray(
                     toks.pop(c.request.rid, []), np.int32)
                 lane_rid[c.lane] = -1
+                pending.pop(c.lane, None)    # cancelled mid-prefill
             for adm in ev.admitted:
                 r = adm.request
                 if r.tokens is None:
                     raise ValueError(
                         f"request {r.rid} has no prompt tokens; synthesize "
                         f"with vocab_size= or attach tokens for live runs")
-                pools, first = self._ingest_request(
-                    pools, np.asarray(r.tokens, np.int32), adm.page_ids)
+                if sched.prefill_chunk_pages is None:
+                    pools, first = self._ingest_request(
+                        pools, np.asarray(r.tokens, np.int32), adm.page_ids)
+                else:
+                    # chunked admission: prefill now, HOLD the page rows;
+                    # ev.prefill_chunks records (chunk 0 included) scatter
+                    # them tick by tick as the scheduler lands the pages
+                    first, pending[adm.lane] = self._prefill_rows(
+                        np.asarray(r.tokens, np.int32))
                 lane_rid[adm.lane] = r.rid
                 toks[r.rid] = [first] if r.max_new_tokens >= 1 else []
                 lane_tok = lane_tok.at[adm.lane, 0].set(first)
+            for chunk in ev.prefill_chunks:
+                pools = self._scatter_rows(pools, pending[chunk["lane"]],
+                                           chunk["page_ids"],
+                                           chunk["page_start"])
+                if chunk["done"]:
+                    del pending[chunk["lane"]]
             if ev.decoded:
                 args = (self.params, lane_tok, pools,
                         jnp.asarray(ev.page_table), jnp.asarray(ev.pos),

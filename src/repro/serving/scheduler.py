@@ -418,6 +418,12 @@ class TickEvent:
     admitted: list = field(default_factory=list)
     completed: list = field(default_factory=list)
     traces: list = field(default_factory=list)
+    #: chunked-prefill ingests this tick (``prefill_chunk_pages``), in
+    #: emission order and INCLUDING the admission tick's first chunk: one
+    #: record {rid, lane, page_ids, page_start, done} per chunk.  The live
+    #: driver scatters exactly these page rows; ``done`` marks the chunk
+    #: that completes the prompt (the lane decodes from this tick on).
+    prefill_chunks: list = field(default_factory=list)
     decoded: bool = False
     page_table: np.ndarray | None = None    # decode-time snapshot (B, P)
     pos: np.ndarray | None = None           # (B,) pre-increment positions
@@ -452,18 +458,42 @@ class Scheduler:
     steps, so a lane's position counts KV-resident tokens.  m <= 1
     requests never decode — they hold the lane for the admission tick
     only (the "drain" state) and complete at the next tick's start.
+
+    With ``prefill_chunk_pages=N`` a long prompt's admission is CHUNKED:
+    each tick ingests at most N prompt pages (allocation + page-scatter
+    trace) while other lanes keep decoding, and the lane joins the decode
+    step on the tick its last chunk lands.  A prompt fitting one chunk is
+    schedule-identical to the classic path; live ``run_scheduler`` runs
+    scatter the same chunks from held prefill rows, so live == sim stays
+    bit-equal across every chunk boundary (pinned in
+    tests/test_scheduler.py).
     """
 
     def __init__(self, cfg: PagedKVConfig, n_lanes: int = 16,
                  max_seq: int = 256, policy="seq-skew",
                  n_kv_layers: int = 1, reserve_scratch: bool = True,
                  fault_plan: FaultPlan | None = None,
+                 prefill_chunk_pages: int | None = None,
                  watchdog=None, timer: Callable[[], float] = time.perf_counter):
         self.cfg = cfg
         self.n_lanes = n_lanes
         self.max_seq = max_seq
         self.max_pages = -(-max_seq // cfg.page_len)
         self.n_kv_layers = n_kv_layers
+        #: chunked prefill (None = classic whole-prompt admission): a long
+        #: prompt's ingest is split into chunks of at most this many pages,
+        #: one chunk per tick, INTERLEAVED with other lanes' decode steps —
+        #: a long admission no longer stalls the whole engine for one tick
+        #: of giant scatter traffic.  The lane starts decoding the tick its
+        #: last chunk lands (a prompt that fits one chunk is
+        #: schedule-identical to the classic path).  Like ``fault_plan``,
+        #: this is construction config, not checkpointed state: resume with
+        #: the same value.
+        if prefill_chunk_pages is not None and prefill_chunk_pages < 1:
+            raise ValueError(f"prefill_chunk_pages must be >= 1, "
+                             f"got {prefill_chunk_pages}")
+        self.prefill_chunk_pages = prefill_chunk_pages
+        self._prefill_next: dict[int, int] = {}   # lane -> next page index
         self.policy_name = policy if isinstance(policy, str) else "custom"
         #: one pool page is reserved as the scratch sink idle lanes' Pallas
         #: scatters target in live runs (predicated off in every trace);
@@ -484,6 +514,7 @@ class Scheduler:
         self._cancelled: set[int] = set()
         self._busy_lane_ticks = 0
         self._decode_ticks = 0
+        self._n_prefill_chunks = 0
         #: seeded fault timeline (``repro.runtime.faults.FaultPlan``) —
         #: events fire at the START of their tick, before completions, in
         #: both live and simulated runs, so the emitted trace blocks and
@@ -629,6 +660,13 @@ class Scheduler:
                                   "lane": -1, "skipped": True})
             return
         lane = int(lanes[0])
+        if lane in self._prefill_next:
+            # mid-chunked-prefill: the page's data hasn't fully landed, and
+            # the remaining chunks will rewrite the prompt pages anyway —
+            # a corruption here is a recorded no-op like a non-resident hit
+            ev.recoveries.append({"tick": self.now, "rid": f.rid,
+                                  "lane": lane, "skipped": True})
+            return
         r = self._by_rid[f.rid]
         row = self.page_table[lane]
         mapped = row[row >= 0]
@@ -670,8 +708,11 @@ class Scheduler:
             if rid < 0:
                 continue
             cancelled = rid in self._cancelled
+            if lane in self._prefill_next and not cancelled:
+                continue                      # mid-prefill: not done, not idle
             if self.lane_steps_left[lane] > 0 and not cancelled:
                 continue
+            self._prefill_next.pop(lane, None)
             row = self.page_table[lane]
             self.pool.release(int(p) for p in row[row >= 0])
             row[:] = -1
@@ -690,16 +731,68 @@ class Scheduler:
                 return
             r = self.queue.pop(0)
             n_pref = -(-r.prompt_len // self.cfg.page_len)
-            ids = np.array([self.pool.alloc(k, r.rid)
-                            for k in range(n_pref)], np.int32)
-            self.page_table[lane, :n_pref] = ids
-            self.lane_rid[lane] = r.rid
+            if self.prefill_chunk_pages is None:
+                ids = np.array([self.pool.alloc(k, r.rid)
+                                for k in range(n_pref)], np.int32)
+                self.page_table[lane, :n_pref] = ids
+                self.lane_rid[lane] = r.rid
+                self.lane_pos[lane] = r.prompt_len
+                # first token comes from prefill; m-1 ragged decode steps
+                self.lane_steps_left[lane] = max(0, r.max_new_tokens - 1)
+                ev.admitted.append(Admission(r, lane, ids))
+                ev.traces.append(admission_prefill_trace(
+                    self.cfg, ids, self.n_kv_layers, rid=r.rid))
+            else:
+                # chunked admission: register the lane prefilling (position
+                # and budget arrive when the LAST chunk lands) and ingest
+                # chunk 0 this tick
+                self.lane_rid[lane] = r.rid
+                self.lane_pos[lane] = 0
+                self.lane_steps_left[lane] = 0
+                self._prefill_next[lane] = 0
+                ids = self._ingest_chunk(lane, r, ev)
+                ev.admitted.append(Admission(r, lane, ids))
+
+    def _ingest_chunk(self, lane: int, r: Request, ev: TickEvent
+                      ) -> np.ndarray:
+        """Allocate and ingest one prefill chunk for a prefilling lane:
+        the next ``prefill_chunk_pages`` prompt pages (fewer on the last
+        chunk), emitted as one page-scatter trace block and one
+        ``ev.prefill_chunks`` record.  The final chunk promotes the lane
+        to decodable (position = prompt length, remaining budget set) —
+        it joins THIS tick's decode step."""
+        n_pref = -(-r.prompt_len // self.cfg.page_len)
+        start = self._prefill_next[lane]
+        end = min(start + self.prefill_chunk_pages, n_pref)
+        ids = np.array([self.pool.alloc(k, r.rid)
+                        for k in range(start, end)], np.int32)
+        self.page_table[lane, start:end] = ids
+        done = end >= n_pref
+        t = admission_prefill_trace(self.cfg, ids, self.n_kv_layers,
+                                    rid=r.rid)
+        t.meta.update({"what": "sched_prefill_chunk", "page_start": start,
+                       "done": done, "tick": self.now})
+        ev.traces.append(t)
+        ev.prefill_chunks.append({"rid": r.rid, "lane": lane,
+                                  "page_ids": ids, "page_start": start,
+                                  "done": done})
+        self._n_prefill_chunks += 1
+        if done:
+            del self._prefill_next[lane]
             self.lane_pos[lane] = r.prompt_len
-            # the first token comes from prefill; m-1 ragged decode steps
+            # first token comes from prefill; m-1 ragged decode steps
             self.lane_steps_left[lane] = max(0, r.max_new_tokens - 1)
-            ev.admitted.append(Admission(r, lane, ids))
-            ev.traces.append(admission_prefill_trace(
-                self.cfg, ids, self.n_kv_layers, rid=r.rid))
+        else:
+            self._prefill_next[lane] = end
+        return ids
+
+    def _prefill_continue(self, ev: TickEvent) -> None:
+        """Advance every lane that is mid-prefill by one chunk (runs
+        BEFORE admission, so a lane admitted this tick only ingests its
+        chunk 0)."""
+        for lane in sorted(self._prefill_next):
+            self._ingest_chunk(lane, self._by_rid[int(self.lane_rid[lane])],
+                               ev)
 
     def _decode(self, ev: TickEvent) -> None:
         active = (self.lane_rid >= 0) & (self.lane_steps_left > 0)
@@ -729,6 +822,7 @@ class Scheduler:
         ev = TickEvent(tick=self.now)
         self._apply_faults(ev)
         self._complete(ev)
+        self._prefill_continue(ev)
         self._admit(ev)
         t0 = self._timer()
         self._decode(ev)
@@ -764,6 +858,7 @@ class Scheduler:
         out = {
             "ticks": self.now,
             "decode_ticks": self._decode_ticks,
+            "prefill_chunks": self._n_prefill_chunks,
             "lane_occupancy": self._busy_lane_ticks / (ticks * self.n_lanes),
             **{f"bank_{k}": float(v)
                for k, v in bank_load_stats(self.pool).items()},
@@ -807,6 +902,10 @@ class Scheduler:
             "cancelled": sorted(self._cancelled),
             "busy_lane_ticks": int(self._busy_lane_ticks),
             "decode_ticks": int(self._decode_ticks),
+            "prefill_chunks": int(self._n_prefill_chunks),
+            "prefill_next": {str(lane): int(nxt)
+                             for lane, nxt in sorted(
+                                 self._prefill_next.items())},
             "fault_cursor": int(self._fault_cursor),
             "degraded": bool(self._degraded),
             "dead_banks": [int(b) for b in self._dead_banks],
@@ -844,6 +943,9 @@ class Scheduler:
         self._cancelled = {int(r) for r in state["cancelled"]}
         self._busy_lane_ticks = int(state["busy_lane_ticks"])
         self._decode_ticks = int(state["decode_ticks"])
+        self._n_prefill_chunks = int(state.get("prefill_chunks", 0))
+        self._prefill_next = {int(lane): int(nxt) for lane, nxt
+                              in state.get("prefill_next", {}).items()}
         self._fault_cursor = int(state["fault_cursor"])
         self._degraded = bool(state["degraded"])
         self._dead_banks = [int(b) for b in state["dead_banks"]]
@@ -884,7 +986,8 @@ def simulate_scheduler_stream(arch, requests: list[Request],
                               n_lanes: int = 16, max_seq: int = 256,
                               page_len: int = 8, n_kv_layers: int = 1,
                               policy="seq-skew",
-                              fault_plan: FaultPlan | None = None):
+                              fault_plan: FaultPlan | None = None,
+                              prefill_chunk_pages: int | None = None):
     """A serving day's KV traffic as a lazy, re-iterable
     ``repro.core.trace.TraceStream`` — one source block per prefill ingest
     / ragged decode step, produced on demand by replaying the scheduler
@@ -909,7 +1012,8 @@ def simulate_scheduler_stream(arch, requests: list[Request],
     def blocks():
         sched = Scheduler(cfg, n_lanes=n_lanes, max_seq=max_seq,
                           policy=policy, n_kv_layers=n_kv_layers,
-                          fault_plan=fault_plan)
+                          fault_plan=fault_plan,
+                          prefill_chunk_pages=prefill_chunk_pages)
         for ev in sched.run(reqs):
             yield from ev.traces
 
@@ -920,6 +1024,8 @@ def simulate_scheduler_stream(arch, requests: list[Request],
         "page_len": page_len, "n_kv_layers": n_kv_layers,
         "policy": policy if isinstance(policy, str) else "custom",
         "n_tokens": total_new_tokens(reqs)}
+    if prefill_chunk_pages is not None:
+        meta["prefill_chunk_pages"] = prefill_chunk_pages
     if fault_plan is not None:
         meta["faults"] = fault_plan.counts()
     return TraceStream(blocks, meta=meta)

@@ -10,9 +10,16 @@ paged-KV traffic), or any registry kernel plus its call args.  Strategies:
 ``"exhaustive"`` / ``"hillclimb"``; objectives: ``"time_us"`` /
 ``"cycles"`` / ``"area_time"`` (Fig 9; pass ``capacity_kb``).  See
 search.py.
+
+``tune.online(engine, window=...)`` is the LIVE counterpart: a rolling-
+window re-pricer over ``engine.step_trace()`` blocks that re-ranks the
+lattice incrementally (``BlockCostCache`` — only new blocks hit the
+device) and recommends hot-swapping the winning arch when traffic shifts.
+See online.py.
 """
+from repro.tune.online import OnlineTuner, online
 from repro.tune.search import (EXTENDED_SPACE, PAPER_SPACE, ArchSpace,
                                TuneResult, search)
 
 __all__ = ["ArchSpace", "TuneResult", "search", "PAPER_SPACE",
-           "EXTENDED_SPACE"]
+           "EXTENDED_SPACE", "OnlineTuner", "online"]

@@ -259,6 +259,10 @@ def test_registry_names_round_trip():
 
 
 def test_unparseable_names_raise_keyerror():
-    for bad in ("3B", "0B", "B16", "16B-", "0R-1W", "nonsense"):
+    # "3B" became a legal non-pow2 lattice point when the generic bank
+    # formula grew modulo maps; bit-mixing maps stay pow2-only, and the
+    # two-level grammar rejects degenerate shapes
+    for bad in ("0B", "B16", "16B-", "0R-1W", "nonsense", "12B-xor",
+                "6B-fold", "1x8B", "4x4B-g0", "4x4B-g4"):
         with pytest.raises(KeyError):
             A.get(bad)

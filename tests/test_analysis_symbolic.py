@@ -153,3 +153,50 @@ def test_family_proof_serialization_label():
     fam = proof.family("transpose64 column stores")
     assert fam.serialization == 16
     assert not fam.conflict_free
+
+
+# --------------------------------------------------------------------------
+# Non-pow2 / two-level lattice: proved, not declined (generic formula PR)
+# --------------------------------------------------------------------------
+
+#: the registered lattice extension the prover must now cover
+EXTENDED_ARCHS = ("12B", "6B-offset", "4x4B-g64", "2x8B-g32", "4x3B")
+
+
+@pytest.mark.parametrize("n", (32, 64))
+def test_prover_covers_non_pow2_and_two_level_transpose(n):
+    """cross_check (prove == engine, bit-exact) over the extended lattice
+    on the transpose program — modulo bank terms and two-level outer
+    factors go through the periodicity argument (bank factors through
+    addr mod lcm(B·2^shift, G·O)), so the prover PROVES these, it does
+    not decline."""
+    archs = [A.get(a) for a in EXTENDED_ARCHS]
+    trace = AddressTrace.from_program(tr_prog.transpose_program(n))
+    proofs = cross_check(archs, tr_prog.symbolic_trace(n), trace)
+    assert len(proofs) == len(EXTENDED_ARCHS)
+
+
+def test_prover_covers_extended_lattice_fft():
+    archs = [A.get(a) for a in EXTENDED_ARCHS]
+    trace = AddressTrace.from_program(fft_prog.fft_program(4096, 4))
+    cross_check(archs, fft_prog.symbolic_trace(4096, 4), trace)
+
+
+def test_two_level_default_granule_proof_equals_flat():
+    """4x4B (granule = inner capacity) factors addresses exactly like flat
+    16B — the PROVED bounds agree family-by-family."""
+    sym = tr_prog.symbolic_trace(64)
+    p_two = prove(A.get("4x4B"), sym)
+    p_flat = prove(A.get("16B"), sym)
+    assert p_two.cost == p_flat.cost
+
+
+def test_prover_declines_degraded_explicitly():
+    """Degraded-bank remaps break the pure modular-arithmetic argument;
+    the prover must DECLINE loudly (NotImplementedError), never emit an
+    unsound bound."""
+    sym = tr_prog.symbolic_trace(32)
+    with pytest.raises(NotImplementedError):
+        prove(A.get("16B").degrade((2,)), sym)
+    with pytest.raises(NotImplementedError):
+        prove(A.get("12B").degrade((1,)), sym)

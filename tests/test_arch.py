@@ -17,6 +17,8 @@ from repro.core.memsim import (LANES, PAPER_MEMORIES, Memory, banked,
 
 PAPER_NAMES = ("4R-1W", "4R-2W", "4R-1W-VB", "16B", "16B-offset",
                "8B", "8B-offset", "4B", "4B-offset")
+#: the non-pow2 / two-level lattice extension (generic bank formula PR)
+EXTENDED_NAMES = ("12B", "6B-offset", "4x4B-g64", "2x8B-g32", "4x3B")
 #: the paper's seven kernel packages + the three model traffic lowerings
 #: registered from repro.models.trace (attn/moe/ssm decode-step streams)
 KERNEL_NAMES = ("banked_gather", "banked_scatter", "banked_transpose",
@@ -30,7 +32,7 @@ def test_registry_resolves_all_nine_paper_architectures():
     for name in PAPER_NAMES:
         a = arch.get(name)
         assert isinstance(a, MemoryArchitecture) and a.name == name
-    assert set(arch.names()) == set(PAPER_NAMES)
+    assert set(arch.names()) == set(PAPER_NAMES) | set(EXTENDED_NAMES)
     assert len(arch.PAPER_ARCHITECTURES) == 9
     # PAPER_MEMORIES stays a thin spec view of the registered architectures
     assert tuple(a.spec for a in arch.PAPER_ARCHITECTURES) == PAPER_MEMORIES

@@ -51,8 +51,15 @@ def test_maps_are_balanced_over_contiguous_ranges(name):
 
 
 def test_power_of_two_required():
+    """Bit-mixing maps (xor/fold) stay pow2-only; lsb/offset grew a modulo
+    form when the lattice gained non-pow2 bank counts, so 6 banks is now
+    legal there and must equal plain modulo."""
+    assert np.asarray(lsb_map(jnp.arange(12), 6)).tolist() == [
+        0, 1, 2, 3, 4, 5, 0, 1, 2, 3, 4, 5]
     with pytest.raises(ValueError):
-        lsb_map(jnp.arange(4), 6)
+        xor_map(jnp.arange(4), 6)
+    with pytest.raises(ValueError):
+        fold_map(jnp.arange(4), 6)
     with pytest.raises(ValueError):
         get_bank_map("nope")
 

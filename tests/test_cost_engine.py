@@ -484,3 +484,214 @@ def test_physical_rows_table_is_cached():
     assert lay.physical_rows(64) is BankedLayout(8, "xor").physical_rows(64)
     np.testing.assert_array_equal(
         np.sort(np.asarray(lay.physical_rows(64))), np.arange(64))
+
+
+# ---------------------- (d) non-pow2 / two-level lattice (generic formula) --
+
+#: the registered lattice extension: non-pow2 lsb/offset and two-level maps
+EXTENDED_NAMES = ("12B", "6B-offset", "4x4B-g64", "2x8B-g32", "4x3B")
+
+
+@pytest.mark.parametrize("name", EXTENDED_NAMES)
+def test_extended_lattice_cost_many_equals_loop(name):
+    """Every new registry arch prices identically through the fused engine
+    and the legacy per-arch loop (the PR acceptance gate: >= 4 new points)."""
+    rng = np.random.default_rng(11)
+    a = arch.get(name)
+    for n_ops in (1, 37, 96):
+        t = _rand_trace(rng, n_ops=n_ops, n_words=1024)
+        assert cost_many([a], t)[0] == a._cost_loop(t), (name, n_ops)
+
+
+def test_extended_lattice_batched_with_paper_points():
+    """Mixed batch: paper + extended points in ONE fused dispatch still
+    match their individual loop costs (mod/two-level terms are no-ops for
+    pow2 flat rows)."""
+    rng = np.random.default_rng(12)
+    t = _rand_trace(rng, n_ops=80)
+    archs = [arch.get(n) for n in ("16B", "4B-offset", "4R-2W") +
+             EXTENDED_NAMES]
+    for a, c in zip(archs, cost_many(archs, t)):
+        assert c == a._cost_loop(t), a.name
+
+
+def test_two_level_default_granule_equals_flat():
+    """4x4B with granule = inner capacity factors addresses exactly like a
+    flat 16B lsb map (outer level = next 2 bits), so the conflict cycles
+    are identical on any trace; only controller overheads could differ and
+    both key on total banks = 16, so full TraceCost equality holds."""
+    rng = np.random.default_rng(13)
+    a_two = arch.get("4x4B")
+    a_flat = arch.get("16B")
+    assert a_two.spec.total_banks == 16
+    for n_ops in (16, 64):
+        t = _rand_trace(rng, n_ops=n_ops, n_words=4096)
+        assert cost_many([a_two], t)[0] == cost_many([a_flat], t)[0]
+
+
+def test_non_pow2_bank_formula_matches_modulo():
+    """12B conflict cycles on a crafted trace equal a direct per-op
+    max-per-bank count under addr % 12 (independent recomputation)."""
+    a = arch.get("12B")
+    addrs = np.arange(16 * 16).reshape(16, 16) * 3 + 5
+    t = AddressTrace.from_ops(addrs.astype(np.int32), kind="load")
+    got = cost_many([a], t)[0]
+    want = 0
+    for row in addrs:
+        want += int(np.bincount(row % 12, minlength=12).max())
+    from repro.core import controllers as ctl
+    ovh = ctl.read_overhead(12)
+    assert got.total_cycles == want + t.n_instructions * ovh
+
+
+def test_extended_lattice_streams_and_chunks():
+    """Chunked/streamed costing stays bit-equal on the new arch families."""
+    rng = np.random.default_rng(14)
+    parts = [_rand_trace(rng, n_ops=n) for n in (5, 1, 33)]
+    dense = AddressTrace.concat(*parts)
+    archs = [arch.get(n) for n in EXTENDED_NAMES]
+    want = cost_many(archs, dense)
+    assert cost_many(archs, dense, block_ops=7) == want
+    stream = TraceStream(parts)
+    assert cost_many(archs, stream, block_ops=7) == want
+
+
+# ----------------------------------- (e) prefetch pipeline bit-equality --
+
+def _thunk_stream(parts, lat_s=0.0):
+    import time as _time
+
+    def mk(p):
+        def t():
+            if lat_s:
+                _time.sleep(lat_s)
+            return p
+        return t
+    return TraceStream.from_thunks([mk(p) for p in parts])
+
+
+@pytest.mark.parametrize("prefetch", (1, 2, 8))
+def test_prefetch_thunk_stream_bit_equal(prefetch):
+    """cost_many(..., prefetch=N) over a thunk-backed stream returns the
+    exact serial result: worker construction order cannot reorder blocks
+    (futures are consumed in thunk order) and pricing is per-block."""
+    rng = np.random.default_rng(21)
+    parts = [_rand_trace(rng, n_ops=n) for n in (9, 1, 64, 17)]
+    a = [arch.get(n) for n in ("16B", "8B-offset", "12B")]
+    want = cost_many(a, TraceStream(parts), block_ops=16)
+    got = cost_many(a, _thunk_stream(parts), block_ops=16,
+                    prefetch=prefetch)
+    assert got == want
+
+
+def test_prefetch_generator_stream_bit_equal():
+    """Generator-backed streams prefetch through the producer thread —
+    same result, and the pinned serving-trace cost from the serial path."""
+    stream = simulate_serving_stream("16B", batch=2, prompt_len=9,
+                                     decode_steps=4, page_len=8)
+    a16 = arch.get("16B")
+    want = cost_many([a16], stream)
+    got = cost_many([a16], simulate_serving_stream(
+        "16B", batch=2, prompt_len=9, decode_steps=4, page_len=8),
+        prefetch=3)
+    assert got == want
+
+
+def test_prefetch_thunk_exception_propagates():
+    def boom():
+        raise RuntimeError("constructor died")
+    s = TraceStream.from_thunks(
+        [lambda: AddressTrace.from_stream(np.arange(16), "load"), boom])
+    with pytest.raises(RuntimeError, match="constructor died"):
+        cost_many([arch.get("16B")], s, prefetch=2)
+
+
+def test_prefetch_generator_exception_propagates():
+    def gen():
+        yield AddressTrace.from_stream(np.arange(16), "load")
+        raise RuntimeError("producer died")
+    with pytest.raises(RuntimeError, match="producer died"):
+        cost_many([arch.get("16B")], TraceStream(gen), prefetch=2)
+
+
+def test_prefetch_validation():
+    t = AddressTrace.from_stream(np.arange(16), "load")
+    with pytest.raises(ValueError):
+        cost_many([arch.get("16B")], TraceStream([t]), prefetch=0)
+
+
+# ------------------------------------ (f) BlockCostCache bit-equality --
+
+from repro.core.cost_engine import BlockCostCache  # noqa: E402
+
+
+def test_cache_warm_reprice_bit_equal_and_hits():
+    rng = np.random.default_rng(31)
+    parts = [_rand_trace(rng, n_ops=24) for _ in range(6)]
+    archs = [arch.get(n) for n in ("16B", "4B-offset", "12B", "4x4B-g64")]
+    cache = BlockCostCache()
+    cold = cost_many(archs, TraceStream(parts), cache=cache)
+    assert cache.stats["misses"] == 6 and cache.stats["hits"] == 0
+    warm = cost_many(archs, TraceStream(parts), cache=cache)
+    assert warm == cold
+    assert cache.stats["hits"] == 6
+    # and both equal the no-cache reference
+    assert cold == cost_many(archs, TraceStream(parts))
+
+
+def test_cache_keys_on_arch_table_degraded_distinct():
+    """A degraded variant lowers different remap rows -> different table
+    digest -> no cross-contamination, while re-pricing the SAME degraded
+    table hits."""
+    rng = np.random.default_rng(32)
+    t = _rand_trace(rng, n_ops=32, masked=False)
+    healthy = arch.get("16B")
+    degraded = healthy.degrade(dead_banks=(3,))
+    cache = BlockCostCache()
+    ch = cost_many([healthy], t, cache=cache)[0]
+    cd = cost_many([degraded], t, cache=cache)[0]
+    assert cache.stats["hits"] == 0 and cache.stats["misses"] == 2
+    assert ch == healthy._cost_loop(t)
+    assert cd == degraded._cost_loop(t)
+    assert cost_many([degraded], t, cache=cache)[0] == cd
+    assert cache.stats["hits"] == 1
+
+
+def test_cache_lru_bounded():
+    rng = np.random.default_rng(33)
+    cache = BlockCostCache(max_entries=3)
+    a16 = [arch.get("16B")]
+    for i in range(5):
+        cost_many(a16, _rand_trace(rng, n_ops=8), cache=cache)
+    assert len(cache) == 3 and cache.stats["entries"] == 3
+
+
+def test_cache_freezes_priced_blocks():
+    """Payload arrays are frozen on first digest — mutating a priced
+    block raises instead of silently re-pricing stale bytes."""
+    t = AddressTrace.from_ops(np.arange(64, dtype=np.int32).reshape(4, 16),
+                              kind="load")
+    cost_many([arch.get("16B")], t, cache=BlockCostCache())
+    with pytest.raises(ValueError):
+        t.addrs[0, 0] = 99
+    t.instr[0] = 0      # instruction ids are NOT frozen (not keyed)
+
+
+@given(st.integers(0, 6), st.integers(1, 4), st.sampled_from([1, 7, 64, 0]))
+@settings(max_examples=15, deadline=None)
+def test_property_cached_prefix_plus_fresh_suffix(n_prefix, seed, block_ops):
+    """The satellite property: price a PREFIX of a window through a cache,
+    then the full window (cached prefix + fresh suffix) — bit-equal to a
+    cold full pass, for block_ops in {1, 7, 64, n} and any split."""
+    rng = np.random.default_rng(seed)
+    parts = [_rand_trace(rng, n_ops=int(rng.integers(1, 40)))
+             for _ in range(8)]
+    bo = sum(p.n_ops for p in parts) if block_ops == 0 else block_ops
+    archs = [arch.get(n) for n in ("16B", "8B-xor", "6B-offset", "2x8B-g32")]
+    cache = BlockCostCache()
+    if n_prefix:
+        cost_many(archs, TraceStream(parts[:n_prefix]), block_ops=bo,
+                  cache=cache)
+    warm = cost_many(archs, TraceStream(parts), block_ops=bo, cache=cache)
+    cold = cost_many(archs, TraceStream(parts), block_ops=bo)
+    assert warm == cold

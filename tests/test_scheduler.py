@@ -350,3 +350,197 @@ def test_us_per_token_objective_needs_token_meta():
         tune.search(workload=serving_workload(
             batch=2, prompt_len=8, decode_steps=4, page_len=4),
             objective="us_per_token")
+
+
+# -- chunked prefill ---------------------------------------------------------
+
+def _run_all(s):
+    evs = []
+    while not s.done():
+        evs.append(s.tick())
+    return evs
+
+
+def _concat_traces(events):
+    from repro.core.trace import AddressTrace
+    return AddressTrace.concat(*[t for e in events for t in e.traces])
+
+
+def test_chunked_prefill_covering_chunk_reproduces_legacy():
+    """prefill_chunk_pages >= every prompt's page count degenerates to the
+    legacy schedule: same events tick-for-tick, same trace bytes, and the
+    chunk records carry exactly one done=True chunk per admission."""
+    legacy = _sched()
+    legacy.submit(_requests(tokens=False))
+    chunked = _sched(prefill_chunk_pages=8)     # 8 pages >= any prompt here
+    chunked.submit(_requests(tokens=False))
+    e1, e2 = _run_all(legacy), _run_all(chunked)
+    assert len(e1) == len(e2)
+    for a, b in zip(e1, e2):
+        assert ([c.request.rid for c in a.completed]
+                == [c.request.rid for c in b.completed])
+        assert ([(x.request.rid, x.lane, list(map(int, x.page_ids)))
+                 for x in a.admitted]
+                == [(x.request.rid, x.lane, list(map(int, x.page_ids)))
+                    for x in b.admitted])
+    t1, t2 = _concat_traces(e1), _concat_traces(e2)
+    np.testing.assert_array_equal(t1.addrs, t2.addrs)
+    np.testing.assert_array_equal(t1.kinds, t2.kinds)
+    np.testing.assert_array_equal(t1.instr, t2.instr)
+    chunks = [c for e in e2 for c in e.prefill_chunks]
+    assert len(chunks) == len(_requests()) and all(c["done"] for c in chunks)
+
+
+def test_chunked_prefill_interleaves_pages_with_decode():
+    """chunk=1 page: multi-page prompts prefill over several ticks, the
+    lane only decodes after its final chunk, chunk records tile the
+    prompt's pages in order, and every request still gets its full token
+    budget."""
+    s = _sched(prefill_chunk_pages=1)
+    reqs = _requests(tokens=False)
+    s.submit(reqs)
+    events = _run_all(s)
+    chunks = [c for e in events for c in e.prefill_chunks]
+    by_rid: dict = {}
+    for c in chunks:
+        by_rid.setdefault(c["rid"], []).append(c)
+    for r in reqs:
+        mine = by_rid[r.rid]
+        n_pages = -(-r.prompt_len // 8)
+        assert len(mine) == n_pages
+        assert [c["page_start"] for c in mine] == list(range(0, n_pages))
+        assert [c["done"] for c in mine] == [False] * (n_pages - 1) + [True]
+        # pages land one chunk per tick, monotonically
+        ticks = [e.tick for e in events for c in e.prefill_chunks
+                 if c["rid"] == r.rid]
+        assert ticks == sorted(ticks) and len(set(ticks)) == len(ticks)
+    # every request completes despite the stretched prefill, none cancelled
+    done = {c.request.rid for e in events for c in e.completed
+            if not c.cancelled}
+    assert done == {r.rid for r in reqs}
+    assert s.stats()["prefill_chunks"] == len(chunks)
+    # a mid-prefill lane never decodes: no decode trace rows for its lane
+    # before its last chunk tick
+    for r in reqs:
+        last_chunk_tick = max(e.tick for e in events
+                              for c in e.prefill_chunks
+                              if c["rid"] == r.rid)
+        lane = by_rid[r.rid][0]["lane"]
+        for e in events:
+            if e.tick >= last_chunk_tick:
+                break
+            for t in e.traces:
+                if t.meta.get("what") == "sched_decode":
+                    assert lane not in t.meta.get("rid_by_lane", {}) or \
+                        t.meta["rid_by_lane"].get(lane) != r.rid
+
+
+def test_chunked_prefill_stream_validates_and_prices():
+    """The chunked stream passes the trace contract, prices through
+    cost_many, and writes exactly the same prefill page words as the
+    legacy schedule — chunking changes WHEN pages are written (and adds
+    per-chunk scatter instructions), never WHICH words."""
+    stream = simulate_scheduler_stream("16B", _requests(tokens=False),
+                                       n_lanes=4, max_seq=32, page_len=8,
+                                       prefill_chunk_pages=1)
+    assert validate(stream, A.get("16B")).ok
+
+    def prefill_words(cp):
+        s = simulate_scheduler_stream("16B", _requests(tokens=False),
+                                      n_lanes=4, max_seq=32, page_len=8,
+                                      prefill_chunk_pages=cp)
+        out = []
+        for b in s:
+            if str(b.meta.get("what", "")).startswith("sched_prefill"):
+                m = (np.ones_like(b.addrs, bool) if b.mask is None
+                     else np.asarray(b.mask))
+                out.append(b.addrs[m])
+        return np.sort(np.concatenate(out))
+
+    np.testing.assert_array_equal(prefill_words(1), prefill_words(None))
+    t_c = simulate_scheduler_stream("16B", _requests(tokens=False),
+                                    n_lanes=4, max_seq=32, page_len=8,
+                                    prefill_chunk_pages=1).materialize()
+    assert cost_many([A.get("16B")], t_c)[0].total_cycles > 0
+
+
+def test_chunked_live_equals_sim_across_chunk_boundaries():
+    """The tentpole-satellite pin: live chunked prefill (rows held at
+    admission, scattered per chunk record) is bit-equal to the simulated
+    lowering across every chunk boundary, and tokens match the unchunked
+    run."""
+    reqs = _requests()
+    legacy = _engine().run_scheduler(reqs)
+    eng = _engine()
+    res = eng.run_scheduler(reqs, prefill_chunk_pages=1)
+    for r in reqs:
+        np.testing.assert_array_equal(res.outputs[r.rid],
+                                      legacy.outputs[r.rid])
+    live = eng.scheduler_stream().materialize()
+    sim = simulate_scheduler_stream(
+        eng.mem_arch, reqs, n_lanes=4, max_seq=32, page_len=8,
+        n_kv_layers=eng.n_kv_layers,
+        prefill_chunk_pages=1).materialize()
+    np.testing.assert_array_equal(live.addrs, sim.addrs)
+    np.testing.assert_array_equal(live.kinds, sim.kinds)
+    np.testing.assert_array_equal(live.instr, sim.instr)
+    np.testing.assert_array_equal(np.asarray(live.mask),
+                                  np.asarray(sim.mask))
+    assert res.ticks > legacy.ticks      # 1-page chunks stretch the day
+
+
+def test_chunked_prefill_checkpoint_mid_prefill_resumes_identically():
+    """state_dict taken while a lane is mid-prefill (prefill_next
+    non-empty) restores to the same remaining schedule."""
+    import json
+    s1 = _sched(prefill_chunk_pages=1)
+    s1.submit(_requests(tokens=False))
+    s1.tick()                                    # chunk 0 of rid 0 (2 pages)
+    sd = s1.state_dict()
+    assert sd["prefill_next"]                    # genuinely mid-prefill
+    assert json.loads(json.dumps(sd)) == sd      # JSON-stable
+    s2 = _sched(prefill_chunk_pages=1)
+    s2.load_state(json.loads(json.dumps(sd)))
+    e1, e2 = _run_all(s1), _run_all(s2)
+    assert ([c.request.rid for e in e1 for c in e.completed]
+            == [c.request.rid for e in e2 for c in e.completed])
+    t1, t2 = _concat_traces(e1), _concat_traces(e2)
+    np.testing.assert_array_equal(t1.addrs, t2.addrs)
+    np.testing.assert_array_equal(t1.kinds, t2.kinds)
+
+
+def test_chunked_live_preempt_resume_mid_prefill(tmp_path):
+    """Live preemption at a tick where prompts are mid-prefill: the
+    resumed half re-derives the held K/V rows from request tokens, and
+    the two halves' traces concatenate to the full chunked simulation."""
+    from repro.core.trace import AddressTrace
+    from repro.runtime.faults import FaultEvent, FaultPlan
+
+    reqs = _requests()
+    baseline = _engine().run_scheduler(reqs, prefill_chunk_pages=1).outputs
+    eng = _engine()
+    plan = FaultPlan((FaultEvent(tick=1, kind="preempt"),))
+    ck = str(tmp_path / "ck")
+    part1 = eng.run_scheduler(reqs, fault_plan=plan, checkpoint_dir=ck,
+                              prefill_chunk_pages=1)
+    assert part1.preempted
+    tr1 = eng.scheduler_stream().materialize()
+    part2 = eng.run_scheduler(None, fault_plan=plan, resume_from=ck,
+                              prefill_chunk_pages=1)
+    assert not part2.preempted
+    for r in reqs:
+        np.testing.assert_array_equal(part2.outputs[r.rid],
+                                      baseline[r.rid])
+    tr2 = eng.scheduler_stream().materialize()
+    full = simulate_scheduler_stream(
+        eng.mem_arch, reqs, n_lanes=4, max_seq=32, page_len=8,
+        n_kv_layers=eng.n_kv_layers, fault_plan=plan,
+        prefill_chunk_pages=1).materialize()
+    cat = AddressTrace.concat(tr1, tr2)
+    np.testing.assert_array_equal(cat.addrs, full.addrs)
+    np.testing.assert_array_equal(cat.instr, full.instr)
+
+
+def test_chunked_prefill_validation():
+    with pytest.raises(ValueError):
+        _sched(prefill_chunk_pages=0)

@@ -1,0 +1,160 @@
+"""tune.online — rolling-window incremental re-pricing over live traffic.
+
+The contract under test: an incremental window re-price (BlockCostCache
+replaying device partials) is BIT-EQUAL to rebuilding the window from
+scratch, the ranking matches tune.search's offline answer on the window
+trace, and the swap recommendation obeys the patience/margin hysteresis.
+"""
+import numpy as np
+import pytest
+
+from repro.core import arch
+from repro.core.cost_engine import BlockCostCache, cost_many
+from repro.core.trace import AddressTrace, TraceStream
+from repro.tune import OnlineTuner, online
+
+ARCHS = ("16B", "16B-offset", "8B", "4B", "12B", "4x4B-g64", "4R-2W")
+
+
+def _step_trace(i, n_ops=24, stride=1):
+    """One synthetic 'decode step' of traffic; stride shapes the winner
+    (stride 1 favors lsb, larger strides favor offset maps)."""
+    addrs = ((np.arange(n_ops * 16, dtype=np.int64) * stride + 7 * i)
+             % 2039).reshape(n_ops, 16).astype(np.int32)
+    return AddressTrace.from_ops(addrs, kind="load" if i % 3 else "store")
+
+
+# ------------------------------------------------ incremental == rebuild --
+
+def test_incremental_reprice_bit_equal_to_full_rebuild():
+    tuner = OnlineTuner(ARCHS, window=6)
+    for i in range(10):          # slides past the window twice over
+        tuner.observe(_step_trace(i))
+        inc = tuner.reprice()
+        full = tuner.reprice(full_rebuild=True)
+        assert inc == full, f"step {i}"
+    assert tuner.cache.stats["hits"] > 0
+
+
+def test_reprice_matches_offline_cost_many_on_window():
+    tuner = OnlineTuner(ARCHS, window=4)
+    traces = [_step_trace(i) for i in range(7)]
+    for t in traces:
+        tuner.observe(t)
+    rows = tuner.reprice()
+    archs = [arch.get(n) for n in ARCHS]
+    want = cost_many(archs, TraceStream(traces[-4:]))
+    by_name = {a.name: c for a, c in zip(archs, want)}
+    assert {n: c for n, _, c in rows} == by_name
+    assert [r[1] for r in rows] == sorted(r[1] for r in rows)
+
+
+def test_window_eviction_only_last_w_steps_priced():
+    tuner = OnlineTuner(("16B",), window=2)
+    big = _step_trace(0, n_ops=64)
+    small = _step_trace(1, n_ops=1), _step_trace(2, n_ops=1)
+    tuner.observe(big)
+    tuner.observe(small[0])
+    tuner.observe(small[1])      # big falls out of the window
+    (_, _, cost), = tuner.reprice()
+    want = cost_many([arch.get("16B")], TraceStream(list(small)))[0]
+    assert cost == want
+
+
+def test_observe_accepts_streams():
+    tuner = OnlineTuner(("16B",), window=3)
+    parts = [_step_trace(0), _step_trace(1)]
+    tuner.observe(TraceStream(parts))
+    (_, _, cost), = tuner.reprice()
+    assert cost == cost_many([arch.get("16B")],
+                             AddressTrace.concat(*parts))[0]
+
+
+# ----------------------------------------------------------- hysteresis --
+
+def _forced_tuner(patience=2, margin=0.0):
+    """16B vs 16B-offset with current=16B and strided traffic that makes
+    the offset map win decisively every step."""
+    return OnlineTuner(("16B", "16B-offset"), window=4, current="16B",
+                       patience=patience, margin=margin)
+
+
+def test_swap_requires_patience_consecutive_wins():
+    tuner = _forced_tuner(patience=3)
+    recs = []
+    for i in range(3):
+        tuner.observe(_step_trace(i, stride=2))   # 2k/2k+1 pairs: offset wins
+        recs.append(tuner.recommend())
+    assert recs[0]["winner"] == "16B-offset"
+    assert [r["swap"] for r in recs] == [False, False, True]
+    assert [r["streak"] for r in recs] == [1, 2, 3]
+
+
+def test_margin_blocks_marginal_wins():
+    tuner = _forced_tuner(patience=1, margin=0.99)   # demand a 99% win
+    tuner.observe(_step_trace(0, stride=2))
+    rec = tuner.recommend()
+    assert rec["winner"] == "16B-offset" and not rec["swap"]
+    assert rec["streak"] == 0
+
+
+def test_swap_resets_hysteresis_and_rebinds_current():
+    tuner = _forced_tuner(patience=1)
+    tuner.observe(_step_trace(0, stride=2))
+    rec = tuner.recommend()
+    assert rec["swap"]
+    tuner.swap(rec["winner"])
+    assert tuner.current == "16B-offset"
+    rec2 = tuner.recommend()
+    assert rec2["current"] == "16B-offset" and not rec2["swap"]
+
+
+def test_step_pulls_engine_step_trace():
+    class FakeEngine:
+        mem_arch = arch.get("16B")
+
+        def __init__(self):
+            self.i = 0
+
+        def step_trace(self):
+            self.i += 1
+            return _step_trace(self.i)
+
+    eng = FakeEngine()
+    tuner = online(eng, archs=ARCHS, window=3)
+    assert tuner.current == "16B"
+    rec = tuner.step()
+    assert eng.i == 1 and rec["window_blocks"] == 1
+    tuner.step()
+    assert rec["ranking"][0][0] == rec["winner"]
+
+
+def test_online_defaults_to_paper_space():
+    from repro.tune.search import PAPER_SPACE
+    tuner = online(window=2)
+    assert [a.name for a in tuner.archs] == list(PAPER_SPACE.names())
+    with pytest.raises(RuntimeError):
+        tuner.step()             # no engine bound, no trace given
+    with pytest.raises(RuntimeError):
+        tuner.reprice()          # nothing observed
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        OnlineTuner(ARCHS, window=0)
+    with pytest.raises(ValueError):
+        OnlineTuner(ARCHS, objective="latency")
+    with pytest.raises(ValueError):
+        OnlineTuner(())
+
+
+def test_shared_cache_can_be_injected():
+    cache = BlockCostCache(max_entries=64)
+    t1 = OnlineTuner(("16B",), window=2, cache=cache)
+    t2 = OnlineTuner(("16B",), window=2, cache=cache)
+    tr = _step_trace(0)
+    t1.observe(tr)
+    t1.reprice()
+    t2.observe(tr)
+    t2.reprice()
+    assert cache.stats["hits"] >= 1      # second tuner reuses the partial
